@@ -1,0 +1,34 @@
+"""Shared benchmark plumbing: CSV emission + experiment configs."""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments"
+OUT.mkdir(exist_ok=True)
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def save_json(name: str, obj):
+    p = OUT / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=2, default=str))
+    return p
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+        self.us = self.s * 1e6

@@ -1,0 +1,151 @@
+"""§Perf hillclimb driver: lower+compile VARIANTS of the three chosen cells and
+record the roofline-term deltas (hypothesis -> change -> before/after).
+
+Run inside the dryrun environment (512 host devices):
+    PYTHONPATH=src REPRO_DRYRUN_XLA_FLAGS=--xla_force_host_platform_device_count=512 \
+        python -m benchmarks.hillclimb [cell ...]
+
+Each variant writes experiments/hillclimb/<cell>__<variant>.json.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      os.environ.get("REPRO_DRYRUN_XLA_FLAGS",
+                                     "--xla_force_host_platform_device_count=512"))
+
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+
+import jax
+
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops_per_device
+from repro.configs import SHAPES, get_arch
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "hillclimb"
+
+
+def measure(arch, shape_id: str, tag: str, *, multi_pod=False, force=False):
+    OUT.mkdir(parents=True, exist_ok=True)
+    out_path = OUT / f"{arch.name}__{shape_id}__{tag}.json"
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        print(_fmt(rec))
+        return rec
+    shape = SHAPES[shape_id]
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        cell = build_cell(arch, shape, mesh)
+        compiled = jax.jit(cell["fn"], in_shardings=cell["in_shardings"],
+                           out_shardings=cell["out_shardings"],
+                           donate_argnums=cell["donate_argnums"]) \
+            .lower(*cell["args"]).compile()
+        la = hlo_cost.analyze(compiled.as_text())
+        mem = compiled.memory_analysis()
+    mf = model_flops_per_device(get_arch(arch.name).name
+                                if arch.name in _KNOWN else arch.name,
+                                shape_id, mesh.devices.size) \
+        if arch.name in _KNOWN else None
+    rec = {
+        "cell": f"{arch.name} x {shape_id}", "variant": tag,
+        "t_compute_s": la["flops"] / PEAK_FLOPS,
+        "t_memory_s": la["traffic_bytes"] / HBM_BW,
+        "t_collective_s": la["collectives"].get("total", 0) / LINK_BW,
+        "collectives": la["collectives"],
+        "flops_per_dev": la["flops"],
+        "traffic_per_dev": la["traffic_bytes"],
+        "temp_gib": getattr(mem, "temp_size_in_bytes", 0) / 2 ** 30,
+        "args_gib": getattr(mem, "argument_size_in_bytes", 0) / 2 ** 30,
+        "model_flops_per_dev": mf,
+        "compile_s": round(time.time() - t0, 1),
+    }
+    out_path.write_text(json.dumps(rec, indent=2))
+    print(_fmt(rec))
+    return rec
+
+
+_KNOWN = set()
+try:
+    from repro.configs import ARCH_IDS
+    _KNOWN = set(ARCH_IDS)
+except Exception:  # noqa: BLE001
+    pass
+
+
+def _fmt(rec):
+    dom = max(("t_compute_s", "t_memory_s", "t_collective_s"),
+              key=lambda k: rec[k])
+    return (f"[hc] {rec['cell']} [{rec['variant']}]: "
+            f"comp {rec['t_compute_s']:.3g}s mem {rec['t_memory_s']:.3g}s "
+            f"coll {rec['t_collective_s']:.3g}s (dom {dom[2:-2]}) "
+            f"temp {rec['temp_gib']:.1f} GiB args {rec['args_gib']:.1f} GiB")
+
+
+# ---------------------------------------------------------------------------
+# the three cells + variants
+# ---------------------------------------------------------------------------
+
+def yi34b_variants():
+    base = get_arch("yi-34b")
+    yield "v0-baseline", base
+    # H1: 56 heads don't divide 16 -> baseline replicates attention weights AND
+    # compute across the model axis (16x redundant attention FLOPs).  Pad the head
+    # count to 64 (14% more attention math, but sharded 16 ways).
+    yield "v1-pad-heads-64", dataclasses.replace(
+        base, name="yi-34b", n_heads=64, sharding_overrides={"kv_heads": None})
+    # H2: remat='dots' keeps matmul outputs (less recompute traffic, more memory)
+    yield "v2-pad-heads+remat-dots", dataclasses.replace(
+        base, name="yi-34b", n_heads=64, sharding_overrides={"kv_heads": None},
+        remat="dots")
+
+
+def qwen_variants():
+    base = get_arch("qwen3-moe-235b-a22b")
+    yield "v0-baseline-accum16", base  # steps.py clamps 32 -> 16 on 16-way data
+    # H1: FSDP regathers scale with microbatch count; fewer accum steps cut the
+    # collective term ~linearly while carries grow (memory headroom from the bf16
+    # grad accumulator)
+    yield "v1-accum8", dataclasses.replace(base, accum_steps=8)
+    yield "v2-accum4", dataclasses.replace(base, accum_steps=4)
+
+
+def rwkv_variants():
+    base = get_arch("rwkv6-1.6b")
+    yield "v0-baseline", base
+    # H1: TP all-reduces on the (B,S,D) residual per layer dominate for a small
+    # model; turning off TP for the tiny projections (model-axis replication,
+    # data-parallel only) trades replicated params (1.6B*2B = 3.2 GB/dev, fits)
+    # for zero per-layer collectives.
+    yield "v1-no-tp", dataclasses.replace(
+        base, sharding_overrides={"heads_x_dim": None, "ff": None,
+                                  "heads": None, "vocab": None})
+    # H2: batch-only sharding + fsdp to cut the replicated optimizer memory
+    yield "v2-no-tp+fsdp", dataclasses.replace(
+        base, fsdp=True,
+        sharding_overrides={"heads_x_dim": None, "ff": None, "heads": None,
+                            "vocab": None})
+
+
+CELLS = {
+    "yi34b": ("train_4k", yi34b_variants),
+    "qwen": ("train_4k", qwen_variants),
+    "rwkv": ("train_4k", rwkv_variants),
+}
+
+
+def main():
+    want = sys.argv[1:] or list(CELLS)
+    for name in want:
+        shape_id, gen = CELLS[name]
+        for tag, arch in gen():
+            measure(arch, shape_id, tag)
+
+
+if __name__ == "__main__":
+    main()

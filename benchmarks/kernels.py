@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks: wall time of the XLA reference path on CPU (the
+compiled-TPU numbers come from the roofline; interpret-mode timing is meaningless)
+plus allclose re-verification of the Pallas kernels at benchmark shapes."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FULL, emit
+from repro.kernels import ops, ref
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    B, S, H, Hkv, D = 2, 1024, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, Hkv, D), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, Hkv, D), jnp.bfloat16)
+
+    flash = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="xla"))
+    us = _bench(flash, q, k, v)
+    emit("kernel/flash_attention_xla_1k", us, f"B{B}S{S}H{H}")
+
+    kv_len = jnp.full((B,), S, jnp.int32)
+    dec = jax.jit(lambda q1, k, v: ops.decode_attention(q1, k, v, kv_len,
+                                                        impl="xla"))
+    us = _bench(dec, q[:, :1], k, v)
+    emit("kernel/decode_attention_xla_1k", us, f"B{B}S{S}")
+
+    Hr, Dh = 8, 64
+    r = jax.random.normal(key, (B, 256, Hr, Dh), jnp.float32)
+    w = jax.nn.sigmoid(jax.random.normal(key, (B, 256, Hr, Dh)))
+    u = jax.random.normal(key, (Hr, Dh)) * 0.1
+    s0 = jnp.zeros((B, Hr, Dh, Dh))
+    rw = jax.jit(lambda r, w: ops.rwkv6_scan(r, r, r, w, u, s0, impl="xla"))
+    us = _bench(rw, r, w)
+    emit("kernel/rwkv6_scan_xla_256", us, f"B{B}H{Hr}")
+
+    x = jax.random.normal(key, (B, 256, Hr, Dh), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (B, 256, Hr)))
+    A = -jnp.exp(jax.random.normal(key, (Hr,)) * 0.3)
+    Bm = jax.random.normal(key, (B, 256, 16))
+    ssd_s0 = jnp.zeros((B, Hr, Dh, 16))
+    ssd = jax.jit(lambda x, dt: ops.mamba2_ssd(x, dt, A, Bm, Bm, ssd_s0,
+                                               impl="xla"))
+    us = _bench(ssd, x, dt)
+    emit("kernel/mamba2_ssd_xla_256", us, f"B{B}H{Hr}")
+
+    # forest: the ATLAS hot path — batch of 4096 pending decisions
+    rs = np.random.RandomState(0)
+    Xf = jnp.asarray(rs.randn(4096, 22), jnp.float32)
+    fi = jnp.asarray(rs.randint(0, 22, (64, 6)), jnp.int32)
+    th = jnp.asarray(rs.randn(64, 6), jnp.float32)
+    lv = jnp.asarray(rs.rand(64, 64), jnp.float32)
+    fr = jax.jit(lambda X: ops.forest_infer(X, fi, th, lv, impl="xla"))
+    us = _bench(fr, Xf)
+    emit("kernel/forest_infer_xla_4096x64trees", us,
+         f"{us/4096:.3f}us_per_decision")
+
+    # interpret-mode correctness spot-checks at bench shapes
+    got = ops.forest_infer(Xf, fi, th, lv, impl="interpret")
+    want = ref.forest_infer_ref(Xf, fi, th, lv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+    emit("kernel/forest_interpret_allclose", 0.0, "ok")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Table 3: accuracy / precision / recall / error / time for the six
+prediction algorithms, per scheduler (FIFO/Fair/Capacity) and task type
+(map/reduce), via 10-fold random cross-validation on simulator logs."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FULL, Timer, emit, save_json
+from repro.cluster.experiment import ExperimentConfig, run_baseline
+from repro.cluster.workload import WorkloadConfig
+from repro.ml.cv import cross_validate
+from repro.ml.models import ALL_MODELS
+
+ALGOS = ["Tree", "Boost", "Glm", "CTree", "R.F.", "N.N."]
+
+
+def run() -> dict:
+    k = 10 if FULL else 4
+    max_n = 12000 if FULL else 4000
+    n_single = 150 if FULL else 60
+    table: dict = {}
+    for sched in ("fifo", "fair", "capacity"):
+        cfg = ExperimentConfig(workload=WorkloadConfig(n_single=n_single,
+                                                       n_chains=12, seed=11))
+        _, trace, _ = run_baseline(sched, cfg)
+        (mx, my), (rx, ry) = trace.datasets()
+        table[sched] = {"n_map": int(len(my)), "n_reduce": int(len(ry))}
+        for kind, X, y in (("map", mx, my), ("reduce", rx, ry)):
+            if len(y) < 100 or len(np.unique(y)) < 2:
+                continue
+            for algo in ALGOS:
+                with Timer() as t:
+                    res = cross_validate(algo, X, y, k=k, max_n=max_n, seed=0)
+                table[sched][f"{kind}/{algo}"] = res
+                emit(f"table3/{sched}/{kind}/{algo}", res["time_ms"] * 1e3,
+                     f"acc={res['accuracy']*100:.1f};pre={res['precision']*100:.1f};"
+                     f"rec={res['recall']*100:.1f};err={res['error']*100:.1f}")
+    save_json("table3_predictors", table)
+    return table
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark entry point — one section per paper table/figure + the assignment's
+roofline/fault-tolerance benches.  Prints ``name,us_per_call,derived`` CSV.
+
+  table3      predictor CV (acc/pre/rec/err/time x 6 algos x 3 scheds x map/reduce)
+  fig4-9      finished/failed jobs+tasks, ATLAS vs base
+  fig10-12    execution times
+  table4      resource usage
+  heartbeat   §4.2 adaptive-interval behaviour
+  kernel      kernel micro-benches + interpret-mode allclose
+  runtime_ft  elastic-trainer fault tolerance (ATLAS vs baseline)
+  roofline    three-term roofline per dry-run cell (reads experiments/dryrun)
+
+Env: REPRO_BENCH_FULL=1 for full-size runs; default is CI-sized.
+Select sections: python -m benchmarks.run [section ...]
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+import traceback
+
+SECTIONS = ("table3", "schedulers", "heartbeat", "kernels", "runtime_ft",
+            "roofline")
+
+
+def _run_section(name: str) -> None:
+    from benchmarks import (heartbeat, kernels, predictors, roofline,
+                            runtime_ft, schedulers)
+    {
+        "table3": predictors.run,
+        "schedulers": schedulers.run,
+        "heartbeat": heartbeat.run,
+        "kernels": kernels.run,
+        "runtime_ft": runtime_ft.run,
+        "roofline": roofline.run,
+    }[name]()
+
+
+def main() -> None:
+    want = sys.argv[1:] or list(SECTIONS)
+    if len(want) == 1:
+        print(f"# === {want[0]} ===", flush=True)
+        _run_section(want[0])
+        return
+    # one SUBPROCESS per section: the heavy sections compile hundreds of
+    # distinct-shape jit programs and the accumulated JIT/LLVM state eventually
+    # fails allocation in a single long-lived process
+    failed = []
+    for name in want:
+        ret = subprocess.run([sys.executable, "-m", "benchmarks.run", name])
+        if ret.returncode != 0:
+            failed.append(name)
+    if failed:
+        print(f"# FAILED sections: {failed}")
+        raise SystemExit(1)
+    print("# all benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

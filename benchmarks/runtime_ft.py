@@ -1,0 +1,41 @@
+"""Fault-tolerant training benchmark: the ATLAS elastic trainer vs the same loop
+without prediction/duplication, same chaos seed — lost steps, rollbacks, wasted
+compute, and end loss."""
+
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+
+from benchmarks.common import FULL, emit, save_json
+from repro.configs import get_arch, smoke_reduce
+from repro.data import DataConfig
+from repro.runtime import ElasticTrainer, RuntimeConfig
+
+
+def run():
+    arch = smoke_reduce(get_arch("stablelm-1.6b"))
+    arch = dataclasses.replace(arch, n_layers=2, d_model=64, d_ff=128,
+                               vocab_size=256, n_heads=2, n_kv_heads=2,
+                               head_dim=32)
+    dc = DataConfig(vocab_size=arch.vocab_size, seq_len=32, global_batch=8)
+    steps = 40 if FULL else 20
+    out = {}
+    for atlas in (False, True):
+        rcfg = RuntimeConfig(n_hosts=6, steps=steps, fail_rate=0.04,
+                             degrade_rate=0.18, checkpoint_every=4,
+                             atlas=atlas, seed=11)
+        with tempfile.TemporaryDirectory() as d:
+            res = ElasticTrainer(arch, rcfg, d, data_cfg=dc).run()
+        out["atlas" if atlas else "baseline"] = res
+        emit(f"runtime_ft/{'atlas' if atlas else 'baseline'}",
+             res["wall_s"] * 1e6 / max(res["committed"], 1),
+             f"lost={res['lost_steps']};rollbacks={res['rollbacks']};"
+             f"dups={res['duplicated_shards']};ckpts={res['checkpoints']};"
+             f"loss={res['final_loss']:.3f}")
+    save_json("runtime_ft", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper Figures 4-9 + Table 4: finished/failed jobs and tasks, execution times
+and resource usage for FIFO/Fair/Capacity vs ATLAS-<base>, aggregated over seeds."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FULL, emit, save_json
+from repro.cluster.chaos import ChaosConfig
+from repro.cluster.experiment import ExperimentConfig, compare
+from repro.cluster.workload import WorkloadConfig
+
+
+def run() -> dict:
+    seeds = (0, 1, 2) if FULL else (0, 1)
+    out: dict = {}
+    for sched in ("fifo", "fair", "capacity"):
+        runs = []
+        for seed in seeds:
+            cfg = ExperimentConfig(
+                workload=WorkloadConfig(seed=7 + seed),
+                chaos=ChaosConfig(seed=3 + seed),
+                seed=seed)
+            runs.append(compare(sched, cfg))
+        agg: dict = {"base": {}, "atlas": {}, "deltas": {}}
+        for part in ("base", "atlas"):
+            keys = [k for k, v in runs[0][part].items()
+                    if isinstance(v, (int, float))]
+            agg[part] = {k: float(np.mean([r[part][k] for r in runs]))
+                         for k in keys}
+        agg["deltas"] = {k: float(np.mean([r["deltas"][k] for r in runs]))
+                         for k in runs[0]["deltas"]}
+        agg["atlas"]["stats"] = runs[0]["atlas"]["atlas"]
+        out[sched] = agg
+        d = agg["deltas"]
+        emit(f"fig4-9/{sched}", 0.0,
+             f"failed_jobs_drop={d['failed_jobs_drop_pct']:.1f}%;"
+             f"failed_tasks_drop={d['failed_tasks_drop_pct']:.1f}%;"
+             f"finished_jobs_gain={d['finished_jobs_gain_pct']:.1f}%;"
+             f"finished_tasks_gain={d['finished_tasks_gain_pct']:.1f}%")
+        emit(f"fig10-12/{sched}", agg["base"]["job_exec_time"] * 1e6,
+             f"job_time_drop={d['job_time_drop_pct']:.1f}%;"
+             f"matched_drop={d['job_time_matched_drop_pct']:.1f}%;"
+             f"map_time={agg['base']['map_exec_time']:.0f}s->"
+             f"{agg['atlas']['map_exec_time']:.0f}s")
+        for res in ("cpu_ms_per_job", "mem_per_job", "hdfs_read_per_job",
+                    "hdfs_write_per_job", "cpu_ms_per_task", "mem_per_task"):
+            emit(f"table4/{sched}/{res}", agg["base"][res],
+                 f"atlas={agg['atlas'][res]:.0f};"
+                 f"drop={100*(1-agg['atlas'][res]/max(agg['base'][res],1e-9)):.1f}%")
+    save_json("fig4_12_table4_schedulers", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

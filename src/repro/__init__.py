@@ -1,0 +1,23 @@
+"""repro — ATLAS (Adaptive Failure-aware Scheduler) rebuilt as a JAX/TPU framework.
+
+Layers:
+  core/        ATLAS scheduler (Algorithm 1), adaptive heartbeat, penalty queues,
+               speculative execution, online predictor retraining.
+  ml/          the paper's six predictive models (GLM, Tree, CTree, RF, Boost, NN)
+               implemented in JAX + the 10-fold CV harness.
+  cluster/     discrete-event fleet simulator + chaos (AnarchyApe equivalent).
+  sched/       FIFO / Fair / Capacity baselines.
+  models/      architecture zoo (dense GQA, MoE, RWKV6, Mamba2 hybrid, whisper,
+               llama-vision) — pure JAX, train_step + serve_step.
+  kernels/     Pallas TPU kernels (+ jnp oracles): forest inference, flash attention,
+               decode attention, rwkv6 scan, mamba2 ssd.
+  parallel/    mesh + logical-axis sharding rules (DP/FSDP/TP/EP/SP).
+  optim/       AdamW, schedules, grad accumulation, int8 error-feedback compression.
+  checkpoint/  async sharded checkpoint/restore with digests.
+  data/        deterministic synthetic pipelines, sharded loaders.
+  runtime/     training control loop wired to ATLAS decisions.
+  configs/     assigned architectures + paper job profiles.
+  launch/      make_production_mesh, dryrun, train, serve entry points.
+"""
+
+__version__ = "1.0.0"

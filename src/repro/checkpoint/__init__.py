@@ -1,0 +1,3 @@
+from repro.checkpoint.store import CheckpointManager
+
+__all__ = ["CheckpointManager"]

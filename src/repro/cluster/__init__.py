@@ -1,0 +1,12 @@
+from repro.cluster.chaos import ChaosConfig, ChaosInjector
+from repro.cluster.simulator import (
+    DEFAULT_FLEET, MACHINE_TYPES, MAP, REDUCE, Job, Node, Simulator, Task,
+)
+from repro.cluster.telemetry import FEATURE_NAMES, N_FEATURES, TelemetryTrace
+from repro.cluster.workload import WorkloadConfig, install, make_workload
+
+__all__ = [
+    "ChaosConfig", "ChaosInjector", "DEFAULT_FLEET", "MACHINE_TYPES", "MAP",
+    "REDUCE", "Job", "Node", "Simulator", "Task", "FEATURE_NAMES", "N_FEATURES",
+    "TelemetryTrace", "WorkloadConfig", "install", "make_workload",
+]

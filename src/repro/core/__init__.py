@@ -1,0 +1,7 @@
+# ATLAS — the paper's primary contribution: failure prediction + Algorithm 1
+# scheduling + adaptive heartbeat + penalty/speculation mechanisms.
+from repro.core.atlas import ATLASScheduler
+from repro.core.heartbeat import HeartbeatController
+from repro.core.predictor import TaskPredictor
+
+__all__ = ["ATLASScheduler", "HeartbeatController", "TaskPredictor"]

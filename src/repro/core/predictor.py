@@ -1,0 +1,71 @@
+"""Task-outcome predictor used by ATLAS: two models (map / reduce, as in §4.2),
+trained on TelemetryTrace logs and re-trained online every 10 simulated minutes.
+
+The default algorithm is Random Forest (the paper's winner); inference goes through
+repro.kernels.forest on TPU (batched over every pending decision in a tick)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cluster.telemetry import TelemetryTrace, attempt_features
+from repro.ml.models import ALL_MODELS
+
+
+class TaskPredictor:
+    def __init__(self, algo: str = "R.F.", min_samples: int = 150,
+                 max_train: int = 20000, seed: int = 0):
+        self.algo = algo
+        self.min_samples = min_samples
+        self.max_train = max_train
+        self.seed = seed
+        self.map_model = None
+        self.reduce_model = None
+        self.fits = 0
+
+    # ------------------------------------------------------------------ train
+    def fit(self, trace: TelemetryTrace) -> bool:
+        (mx, my), (rx, ry) = trace.datasets()
+        trained = False
+        rng = np.random.RandomState(self.seed + self.fits)
+
+        def sub(X, y):
+            if X.shape[0] > self.max_train:
+                idx = rng.choice(X.shape[0], self.max_train, replace=False)
+                return X[idx], y[idx]
+            return X, y
+
+        if mx.shape[0] >= self.min_samples and len(np.unique(my)) > 1:
+            X, y = sub(mx, my)
+            self.map_model = ALL_MODELS[self.algo]().fit(X, y)
+            trained = True
+        if rx.shape[0] >= self.min_samples and len(np.unique(ry)) > 1:
+            X, y = sub(rx, ry)
+            self.reduce_model = ALL_MODELS[self.algo]().fit(X, y)
+            trained = True
+        self.fits += int(trained)
+        return trained
+
+    @property
+    def ready(self) -> bool:
+        return self.map_model is not None or self.reduce_model is not None
+
+    # ------------------------------------------------------------------ infer
+    def _model_for(self, task):
+        return self.map_model if task.kind == "map" else self.reduce_model
+
+    def p_success(self, sim, task, node, speculative=False) -> float:
+        model = self._model_for(task)
+        if model is None:
+            return 1.0
+        x = attempt_features(sim, task, node, speculative)[None]
+        return float(model.predict_proba(x)[0])
+
+    def p_success_nodes(self, sim, task, nodes, speculative=False) -> np.ndarray:
+        """Batched scoring of candidate placements (one kernel call)."""
+        model = self._model_for(task)
+        if model is None:
+            return np.ones(len(nodes), np.float32)
+        X = np.stack([attempt_features(sim, task, n, speculative)
+                      for n in nodes])
+        return model.predict_proba(X)

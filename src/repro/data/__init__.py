@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticStream
+
+__all__ = ["DataConfig", "Prefetcher", "SyntheticStream"]

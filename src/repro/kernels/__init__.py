@@ -1,0 +1,18 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling) with jnp oracles.
+
+  flash_attention.py   blockwise causal/window GQA attention (MXU, online softmax)
+  decode_attention.py  flash-decode vs long KV caches (scalar-prefetch lengths)
+  rwkv6_scan.py        WKV6 recurrence, state resident in VMEM across time chunks
+  mamba2_ssd.py        SSD recurrence, (H,P,N) state in VMEM scratch
+  forest.py            oblivious-forest inference — the ATLAS scheduling hot path,
+                       reformulated gather-free as two MXU matmuls
+
+  ops.py               jit dispatch: "xla" (ref path: CPU smoke + dry-run),
+                       "pallas" (TPU), "interpret" (kernel body on CPU for tests)
+  ref.py               pure-jnp oracles; also the XLA lowering path — includes the
+                       custom VJPs for both linear recurrences
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

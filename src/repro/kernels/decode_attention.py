@@ -1,0 +1,114 @@
+"""Flash-decode as a Pallas TPU kernel: one query token per sequence against a long
+KV cache, online softmax over kv blocks.
+
+TPU adaptation: the KV cache is streamed HBM->VMEM in (kv_block, D) tiles via
+BlockSpecs; all H query heads for a kv head are processed together (the GQA group is
+the MXU M dimension, so the score computation is a real matmul instead of H matvecs).
+The live-length mask comes from a scalar per sequence (kv_len) placed in SMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            kv_block: int, n_kv: int, window: int, scale: float):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[0]
+    k_lo = ki * kv_block
+    live = k_lo < kv_len
+    if window:
+        live &= (k_lo + kv_block) > kv_len - 1 - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0]                      # (Hkv, G, D)
+        k = k_ref[0]                      # (Hkv, kb, D)
+        v = v_ref[0]
+        Hkv, G, D = q.shape
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale    # (Hkv, G, kb)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        mask = kpos < kv_len
+        if window:
+            mask &= kpos > kv_len - 1 - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)            # (Hkv, G, D)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "kv_block", "interpret"))
+def decode_attention(q, k, v, kv_len, *, window=0, kv_block=512, interpret=False):
+    """q: (B, 1, H, D); k/v: (B, Smax, Hkv, D); kv_len: (B,) live prefix lengths."""
+    B, _, H, D = q.shape
+    Smax, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kv_block = min(kv_block, Smax)
+    assert Smax % kv_block == 0
+    nkv = Smax // kv_block
+
+    qg = q.reshape(B, Hkv, G, D)
+    kg = jnp.moveaxis(k, 1, 2)            # (B, Hkv, Smax, D)
+    vg = jnp.moveaxis(v, 1, 2)
+
+    kernel = functools.partial(_kernel, kv_block=kv_block, n_kv=nkv,
+                               window=window, scale=1.0 / float(D) ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nkv),
+        in_specs=[
+            pl.BlockSpec((1, Hkv, G, D), lambda b, ki, lens: (b, 0, 0, 0)),
+            pl.BlockSpec((1, Hkv, kv_block, D), lambda b, ki, lens: (b, 0, ki, 0)),
+            pl.BlockSpec((1, Hkv, kv_block, D), lambda b, ki, lens: (b, 0, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hkv, G, D), lambda b, ki, lens: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, G, D), jnp.float32),
+            pltpu.VMEM((Hkv, G), jnp.float32),
+            pltpu.VMEM((Hkv, G), jnp.float32),
+        ],
+    )
+
+    def idx_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l):
+        b = pl.program_id(0)
+        _kernel(lens_ref.at[pl.ds(b, 1)], q_ref, k_ref, v_ref, o_ref, acc, m, l,
+                kv_block=kv_block, n_kv=nkv, window=window,
+                scale=1.0 / float(D) ** 0.5)
+
+    out = pl.pallas_call(
+        idx_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qg, kg, vg)
+    return out.reshape(B, 1, H, D)

@@ -1,0 +1,130 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU-native adaptation (not a CUDA port): the kernel is organised around the MXU and
+VMEM tiling — q/k/v blocks live in VMEM via BlockSpecs, the score matmul runs on the
+MXU with fp32 accumulation (preferred_element_type), online-softmax running stats are
+VMEM scratch persisted across the sequential last grid dimension (TPU grids iterate
+the trailing axis sequentially on a core, which replaces the CUDA notion of a kv-loop
+inside one block).  Causal/window block *skipping* uses pl.when on whole blocks.
+
+Layout: q (B, S, H, D) is viewed as (B, Hkv, G, S, D) so one kernel instance computes
+all G grouped query heads for its kv head — the GQA K/V block is loaded once per
+group, the TPU analogue of shared-memory KV reuse.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            causal: bool, window: int, q_block: int, kv_block: int,
+            n_kv: int, offset: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level causal/window skip
+    q_lo = qi * q_block + offset          # first absolute query position
+    q_hi = q_lo + q_block - 1
+    k_lo = ki * kv_block
+    k_hi = k_lo + kv_block - 1
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_lo <= q_hi
+    if window:
+        live &= k_hi > q_lo - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]                   # (G, qb, D)
+        k = k_ref[0, 0]                   # (kb, D)
+        v = v_ref[0, 0]                   # (kb, D)
+        G, qb, D = q.shape
+        s = jax.lax.dot_general(
+            q.reshape(G * qb, D), k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)  # (G*qb, kb)
+        s = s * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (G, qb, kv_block), 1)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (G, qb, kv_block), 2)
+        s = s.reshape(G, qb, kv_block)
+        mask = jnp.ones_like(qpos, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]               # (G, qb)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.reshape(G * qb, kv_block).astype(v.dtype), v,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(G, qb, D)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                             "kv_block", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_block=256, kv_block=256,
+                    interpret=False):
+    """q: (B, S, H, D); k/v: (B, Skv, Hkv, D).  Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, Skv)
+    assert S % q_block == 0 and Skv % kv_block == 0
+    nq, nkv = S // q_block, Skv // kv_block
+    offset = Skv - S
+
+    qg = jnp.moveaxis(q.reshape(B, S, Hkv, G, D), 1, 3)   # (B, Hkv, G, S, D)
+    kg = jnp.moveaxis(k, 1, 2)                            # (B, Hkv, Skv, D)
+    vg = jnp.moveaxis(v, 1, 2)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, q_block=q_block,
+        kv_block=kv_block, n_kv=nkv, offset=offset,
+        scale=1.0 / float(D) ** 0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, q_block, D), lambda b, h, qi, ki: (b, h, 0, qi, 0)),
+            pl.BlockSpec((1, 1, kv_block, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, kv_block, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, q_block, D),
+                               lambda b, h, qi, ki: (b, h, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, q_block, D), jnp.float32),   # acc
+            pltpu.VMEM((G, q_block), jnp.float32),      # running max
+            pltpu.VMEM((G, q_block), jnp.float32),      # running denom
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return jnp.moveaxis(out, 3, 1).reshape(B, S, H, D)

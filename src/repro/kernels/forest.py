@@ -1,0 +1,96 @@
+"""Oblivious-forest inference as a Pallas TPU kernel — the ATLAS scheduling hot path.
+
+The paper evaluates its Random Forest per scheduling decision (~26-36 ms in R).  Our
+runtime predicts outcomes for *every pending step-shard each scheduler tick*, so
+inference is batched and kernelised.
+
+TPU adaptation (this is where the Hadoop-era algorithm is rethought for the MXU):
+tree traversal is gather-heavy on CPUs/GPUs; TPUs hate gathers.  For *oblivious*
+trees (one (feature, threshold) test per level, as in CatBoost) the whole forest
+evaluates gather-free:
+
+  1. feature gather  ->  one-hot matmul:  X (Bb,F) @ S (F, T*D) on the MXU, where
+     S[f, t*D+d] = 1 iff tree t level d tests feature f (precomputed outside).
+  2. bits            ->  compare with thresholds (VPU).
+  3. leaf lookup     ->  product over levels of 2-way selects builds the implicit
+     one-hot over 2^D leaves, contracted against leaf values with a second matmul
+     (Bb, T*2^D) @ (T*2^D, 1).
+
+Everything stays in VMEM for a batch tile; zero gathers, two matmuls per tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, sel_ref, thr_ref, path_ref, leaves_ref, o_ref, *,
+            T: int, D: int):
+    x = x_ref[...].astype(jnp.float32)            # (Bb, F)
+    sel = sel_ref[...].astype(jnp.float32)        # (F, T*D)
+    g = jax.lax.dot_general(x, sel, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Bb, T*D)
+    thr = thr_ref[...].astype(jnp.float32).reshape(1, T * D)
+    bits = (g > thr).astype(jnp.float32).reshape(-1, T, D)       # (Bb, T, D)
+
+    n_leaves = 1 << D
+    path = path_ref[...].astype(jnp.float32)      # (n_leaves, D), leaf bit patterns
+    onehot = jnp.ones((bits.shape[0], T, n_leaves), jnp.float32)
+    for d in range(D):
+        b_d = bits[:, :, d][:, :, None]           # (Bb, T, 1)
+        p_d = path[:, d][None, None, :]           # (1, 1, n_leaves)
+        onehot = onehot * (b_d * p_d + (1.0 - b_d) * (1.0 - p_d))
+
+    leaves = leaves_ref[...].astype(jnp.float32).reshape(T * n_leaves, 1)
+    score = jax.lax.dot_general(
+        onehot.reshape(-1, T * n_leaves), leaves, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (Bb, 1)
+    o_ref[...] = (score[:, 0] / T).astype(o_ref.dtype)
+
+
+def _selector(feat_idx: jax.Array, F: int) -> jax.Array:
+    """One-hot selector S (F, T*D) from feat_idx (T, D)."""
+    flat = feat_idx.reshape(-1)                   # (T*D,)
+    return jax.nn.one_hot(flat, F, dtype=jnp.float32).T
+
+
+def _path_bits(D: int) -> jax.Array:
+    idx = jnp.arange(1 << D)
+    return ((idx[:, None] >> jnp.arange(D - 1, -1, -1)[None, :]) & 1).astype(
+        jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def forest_infer(x, feat_idx, thresholds, leaves, *, block_b=256, interpret=False):
+    """x: (B, F) fp32; feat_idx: (T, D) int32; thresholds: (T, D); leaves: (T, 2^D).
+    Returns (B,) mean-leaf margin scores."""
+    B, F = x.shape
+    T, D = feat_idx.shape
+    block_b = min(block_b, B)
+    pad = (-B) % block_b
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    nB = xp.shape[0] // block_b
+
+    sel = _selector(feat_idx, F)
+    path = _path_bits(D)
+
+    kernel = functools.partial(_kernel, T=T, D=D)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nB,),
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i: (i, 0)),
+            pl.BlockSpec((F, T * D), lambda i: (0, 0)),
+            pl.BlockSpec((T, D), lambda i: (0, 0)),
+            pl.BlockSpec((1 << D, D), lambda i: (0, 0)),
+            pl.BlockSpec((T, 1 << D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+        interpret=interpret,
+    )(xp, sel, thresholds.astype(jnp.float32), path, leaves.astype(jnp.float32))
+    return out[:B]

@@ -1,0 +1,81 @@
+"""Mamba2 SSD recurrence as a Pallas TPU kernel.
+
+TPU adaptation: the (H, P, N) state is VMEM scratch persisted across sequential
+time-chunk grid steps; all heads are processed per kernel instance (head is a
+batched VPU dimension — the per-step update is an outer-product FMA of shape
+(H, P, N), which vectorises over lanes).  x/dt/B/C stream in chunk tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sf_ref, state, *,
+            chunk: int, n_chunks: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        state[...] = s0_ref[0].astype(jnp.float32)
+
+    A = a_ref[...].astype(jnp.float32)            # (H,)
+
+    def step(t, carry):
+        xt = x_ref[0, t].astype(jnp.float32)      # (H, P)
+        dtt = dt_ref[0, t].astype(jnp.float32)    # (H,)
+        bt = b_ref[0, t].astype(jnp.float32)      # (N,)
+        ct = c_ref[0, t].astype(jnp.float32)      # (N,)
+        decay = jnp.exp(dtt * A)                  # (H,)
+        inject = (dtt[:, None] * xt)[:, :, None] * bt[None, None, :]
+        state[...] = decay[:, None, None] * state[...] + inject
+        yt = (state[...] * ct[None, None, :]).sum(axis=-1)   # (H, P)
+        y_ref[0, t] = yt.astype(y_ref.dtype)
+        return carry
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ti == n_chunks - 1)
+    def _finish():
+        sf_ref[0] = state[...].astype(sf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(x, dt, A, B, C, state0, *, chunk=128, interpret=False):
+    """x: (B, S, H, P); dt: (B, S, H); A: (H,); B/C: (B, S, N);
+    state0: (B, H, P, N) fp32.  Returns (y (B,S,H,P), final state)."""
+    Bb, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(Bb, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((H,), lambda b, t: (0,)),
+            pl.BlockSpec((1, chunk, N), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b, t: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, t: (b, t, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b, t: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, state0)
+    return y, sf

@@ -1,0 +1,77 @@
+"""Jit-ready dispatch wrappers around the Pallas kernels.
+
+Every op takes ``impl``:
+  "xla"        pure-jnp flash-style path (ref.py) — CPU smoke tests + the multi-pod
+               dry-run (Pallas TPU kernels don't lower on the CPU host backend).
+  "pallas"     compiled Pallas TPU kernel — the production path on real hardware.
+  "interpret"  Pallas kernel body interpreted on CPU — correctness tests.
+
+The default comes from ``repro.kernels.ops.DEFAULT_IMPL`` (env: REPRO_KERNEL_IMPL)
+so tests can flip the whole model zoo onto interpret-mode kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import ref
+
+DEFAULT_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "xla")
+_VALID = ("xla", "pallas", "interpret")
+
+
+def _resolve(impl: str | None) -> str:
+    impl = impl or DEFAULT_IMPL
+    if impl not in _VALID:
+        raise ValueError(f"impl must be one of {_VALID}, got {impl!r}")
+    return impl
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, impl=None,
+                    q_chunk=512, kv_chunk=512):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       q_chunk=q_chunk, kv_chunk=kv_chunk)
+    from repro.kernels import flash_attention as fk
+    return fk.flash_attention(q, k, v, causal=causal, window=window,
+                              interpret=(impl == "interpret"))
+
+
+def decode_attention(q, k, v, kv_len, *, window=0, impl=None, kv_chunk=1024):
+    impl = _resolve(impl)
+    if impl == "xla":
+        # full-cache einsum form: GSPMD shards it over kv_seq with automatic
+        # partial-softmax merge collectives (see ref.decode_attention_xla)
+        return ref.decode_attention_xla(q, k, v, kv_len, window=window)
+    from repro.kernels import decode_attention as dk
+    return dk.decode_attention(q, k, v, kv_len, window=window,
+                               interpret=(impl == "interpret"))
+
+
+def rwkv6_scan(r, k, v, w, u, state0, *, impl=None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.rwkv6_scan_ref(r, k, v, w, u, state0)
+    from repro.kernels import rwkv6_scan as rk
+    return rk.rwkv6_scan(r, k, v, w, u, state0, interpret=(impl == "interpret"))
+
+
+def mamba2_ssd(x, dt, A, B, C, state0, *, impl=None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.mamba2_ssd_ref(x, dt, A, B, C, state0)
+    from repro.kernels import mamba2_ssd as mk
+    return mk.mamba2_ssd(x, dt, A, B, C, state0, interpret=(impl == "interpret"))
+
+
+def forest_infer(x, feat_idx, thresholds, leaves, *, impl=None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.forest_infer_ref(x, feat_idx, thresholds, leaves)
+    from repro.kernels import forest as fk
+    return fk.forest_infer(x, feat_idx, thresholds, leaves,
+                           interpret=(impl == "interpret"))

@@ -1,0 +1,461 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the single source of numerical truth: each Pallas kernel's test asserts
+allclose against the function here, and the XLA (non-Pallas) model path calls these
+directly (they are written flash-style — chunked, online-softmax, fp32 accumulators —
+so they are also the dry-run lowering path on the CPU host).
+
+Conventions: q (B, S, H, D); k/v (B, S_kv, Hkv, D); GQA via H = G * Hkv.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_naive(q, k, v, *, causal=True, window=0):
+    """O(S^2)-memory reference; only for small test shapes."""
+    B, S, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / jnp.sqrt(D).astype(jnp.float32)
+    qpos = jnp.arange(S)[:, None] + (Skv - S)  # right-aligned query positions
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def _divisor_chunk(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (whisper's 1500 frames etc.)."""
+    c = min(want, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0,
+                        q_chunk=512, kv_chunk=512):
+    """Chunked online-softmax attention (pure jnp, fp32 accumulators).
+
+    Causal chunk *skipping* is done with a mask (the Pallas kernel skips blocks for
+    real); the compute-term consequence is analysed in EXPERIMENTS.md §Roofline."""
+    B, S, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    q_chunk = _divisor_chunk(S, q_chunk)
+    kv_chunk = _divisor_chunk(Skv, kv_chunk)
+    nq, nkv = S // q_chunk, Skv // kv_chunk
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    offset = Skv - S  # right-aligned queries (prefill with history)
+
+    qf = q.reshape(B, nq, q_chunk, Hkv, G, D)
+    kf = k.reshape(B, nkv, kv_chunk, Hkv, D)
+    vf = v.reshape(B, nkv, kv_chunk, Hkv, D)
+
+    # flash-style memory under autodiff: every (q-chunk x kv-chunk) block is
+    # rematerialised in the backward pass (otherwise scan would store the full
+    # S x S attention matrix as residuals)
+    @jax.checkpoint
+    def q_block(qi, qblk):
+        qblk = qblk.astype(jnp.float32) * scale  # (B, qc, Hkv, G, D)
+        qpos = qi * q_chunk + jnp.arange(q_chunk) + offset
+
+        @jax.checkpoint
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            ki, kblk, vblk = inputs
+            kblk = kblk.astype(jnp.float32)
+            vblk = vblk.astype(jnp.float32)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk, kblk)  # (B,qc,Hkv,G,kc)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), dtype=bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bqhgk,bkhd->bqhgd", p, vblk)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, q_chunk, Hkv, G, D), jnp.float32)
+        m0 = jnp.full((B, q_chunk, Hkv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, Hkv, G), jnp.float32)
+        ks = jnp.arange(nkv)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (ks, jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0)))
+        return acc / jnp.maximum(l[..., None], 1e-37)
+
+    out = jax.lax.map(lambda args: q_block(*args),
+                      (jnp.arange(nq), jnp.moveaxis(qf, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention_xla(q, k, v, kv_len, *, window=0):
+    """GSPMD-friendly one-token decode attention: full-cache masked softmax with
+    einsum reductions over the KV sequence dim.  When the cache is sharded along
+    kv_seq, XLA turns the max/sum/contraction reductions into the partial-softmax
+    merge collectives automatically (the distributed flash-decode pattern) — this
+    is the model-path implementation; the chunked version below is the Pallas
+    kernel's oracle."""
+    B, _, H, D = q.shape
+    Smax, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32))  # (B,Hkv,G,S)
+    kpos = jnp.arange(Smax)[None, :]
+    mask = kpos < kv_len[:, None]
+    if window:
+        mask &= kpos > (kv_len[:, None] - 1 - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(l[..., None], 1e-37)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len, *, window=0, kv_chunk=1024):
+    """One-token decode attention: q (B, 1, H, D) against a (B, S_max, Hkv, D) cache.
+
+    `kv_len` (B,) int32 gives the live prefix length per sequence; positions past it
+    are masked.  Online softmax over kv chunks, fp32 accumulators."""
+    B, _, H, D = q.shape
+    Smax, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kv_chunk = min(kv_chunk, Smax)
+    nkv = Smax // kv_chunk
+    assert Smax % kv_chunk == 0
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, D)
+
+    def kv_step(carry, ki):
+        acc, m, l = carry
+        kblk = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+        vblk = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+        kblk = kblk.astype(jnp.float32)
+        vblk = vblk.astype(jnp.float32)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qf, kblk)  # (B,Hkv,G,kc)
+        kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+        mask = kpos[None, :] < kv_len[:, None]
+        if window:
+            mask &= kpos[None, :] > (kv_len[:, None] - 1 - window)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhgk,bkhd->bhgd", p, vblk)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Hkv, G, D), jnp.float32)
+    m0 = jnp.full((B, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), jnp.arange(nkv))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) WKV recurrence
+# ---------------------------------------------------------------------------
+#
+# The recurrence is linear in the state, so instead of letting scan-AD store the
+# (B,H,Dh,Dh) state at EVERY timestep (34 GB/device at 4k tokens — see
+# EXPERIMENTS.md §Perf), we give it a custom VJP: the backward pass is the
+# analytic adjoint recurrence run in reverse, with forward states recomputed
+# chunk-wise from stored chunk boundaries.  Memory: O(T/c + c) states.
+
+_RWKV_CHUNK = 128
+
+
+def _rwkv6_fwd_scan(r, k, v, w, u, state0):
+    B, S, H, Dh = r.shape
+    uf = u.astype(jnp.float32)
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs  # each (B,H,Dh)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,Dh,Dh)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, state + uf[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, yt
+
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 1, 0) for x in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def rwkv6_scan_ref(r, k, v, w, u, state0):
+    """Sequential WKV6: per head, S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t).
+
+    r,k,v,w: (B, S, H, Dh); u: (H, Dh); state0: (B, H, Dh, Dh) [key x value dims].
+    Returns y (B,S,H,Dh) and final state.  Linear-memory backward (custom VJP)."""
+    y, state = _rwkv6_fwd_scan(r, k, v, w, u, state0)
+    return y.astype(r.dtype), state
+
+
+def _rwkv6_fwd(r, k, v, w, u, state0):
+    B, S, H, Dh = r.shape
+    c = _divisor_chunk(S, _RWKV_CHUNK)
+    n = S // c
+    split = lambda x: jnp.moveaxis(
+        x.astype(jnp.float32).reshape(B, n, c, H, Dh), 1, 0)  # (n,B,c,H,Dh)
+
+    def chunk_step(state, xs):
+        rc, kc, vc, wc = xs
+        yc, new_state = _rwkv6_fwd_scan(rc, kc, vc, wc, u, state)
+        return new_state, (yc, state)  # emit chunk output + INITIAL state
+
+    state_f, (ys, boundaries) = jax.lax.scan(
+        chunk_step, state0.astype(jnp.float32),
+        (split(r), split(k), split(v), split(w)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, Dh)
+    return (y.astype(r.dtype), state_f), (r, k, v, w, u, boundaries, c)
+
+
+def _rwkv6_bwd(res, cts):
+    r, k, v, w, u, boundaries, c = res
+    ybar, state_f_bar = cts
+    B, S, H, Dh = r.shape
+    n = S // c
+    uf = u.astype(jnp.float32)
+    split = lambda x: jnp.moveaxis(
+        x.astype(jnp.float32).reshape(B, n, c, H, Dh), 1, 0)
+    rs, ks, vs, ws, ybs = split(r), split(k), split(v), split(w), split(ybar)
+
+    def chunk_bwd(sbar, xs):
+        rc, kc, vc, wc, ybc, s_boundary = xs
+
+        def fwd_step(state, t):
+            kt, wt = kc[:, t], wc[:, t]
+            kv = kt[..., :, None] * vc[:, t][..., None, :]
+            return wt[..., :, None] * state + kv, state      # emit S_{t-1}
+
+        _, s_prevs = jax.lax.scan(fwd_step, s_boundary, jnp.arange(c))
+
+        def bwd_step(carry, t):
+            sbar, ubar = carry
+            ti = c - 1 - t
+            rt, kt, vt, wt = rc[:, ti], kc[:, ti], vc[:, ti], wc[:, ti]
+            yb = ybc[:, ti]
+            s_prev = s_prevs[ti]
+            kv = kt[..., :, None] * vt[..., None, :]
+            M = s_prev + uf[None, :, :, None] * kv
+            rbar = jnp.einsum("bhkv,bhv->bhk", M, yb)
+            yv = jnp.einsum("bhv,bhv->bh", yb, vt)           # (ybar . v)
+            kbar = jnp.einsum("bhkv,bhv->bhk", sbar, vt) \
+                + uf[None] * rt * yv[..., None]
+            vbar = jnp.einsum("bhkv,bhk->bhv", sbar, kt) \
+                + yb * jnp.einsum("bhk,bhk->bh", rt * uf[None], kt)[..., None]
+            wbar = jnp.einsum("bhkv,bhkv->bhk", sbar, s_prev)
+            ubar = ubar + jnp.einsum("bhk,bh->hk", rt * kt, yv)
+            sbar_prev = wt[..., :, None] * sbar \
+                + rt[..., :, None] * yb[..., None, :]        # output-path term
+            return (sbar_prev, ubar), (rbar, kbar, vbar, wbar)
+
+        (sbar, ubar_c), grads = jax.lax.scan(
+            bwd_step, (sbar, jnp.zeros((H, Dh), jnp.float32)), jnp.arange(c))
+        # grads are stacked in REVERSE time order -> flip to chunk order
+        grads = tuple(jnp.moveaxis(g[::-1], 0, 1) for g in grads)  # (B,c,H,Dh)
+        return sbar, (grads, ubar_c)
+
+    sbar0 = state_f_bar.astype(jnp.float32)
+    xs_rev = tuple(x[::-1] for x in (rs, ks, vs, ws, ybs, boundaries))
+    sbar_final, ((rb, kb, vb, wb), ubs) = jax.lax.scan(chunk_bwd, sbar0, xs_rev)
+    join = lambda x: jnp.moveaxis(x[::-1], 0, 1).reshape(B, S, H, Dh)
+    return (join(rb).astype(r.dtype), join(kb).astype(k.dtype),
+            join(vb).astype(v.dtype), join(wb).astype(w.dtype),
+            ubs.sum(axis=0).astype(u.dtype), sbar_final)
+
+
+rwkv6_scan_ref.defvjp(_rwkv6_fwd, _rwkv6_bwd)
+
+
+def rwkv6_step_ref(r, k, v, w, u, state):
+    """Single decode step: r,k,v,w (B,H,Dh)."""
+    kv = k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    sf = state.astype(jnp.float32)
+    y = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32),
+                   sf + u.astype(jnp.float32)[None, :, :, None] * kv)
+    state = w.astype(jnp.float32)[..., :, None] * sf + kv
+    return y.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD — custom VJP for the same reason as WKV6 above (linear recurrence;
+# scan-AD would store the (B,H,P,N) state per timestep)
+# ---------------------------------------------------------------------------
+
+_SSD_CHUNK = 128
+
+
+def _ssd_fwd_scan(x, dt, A, Bmat, Cmat, state0):
+    Af = A.astype(jnp.float32)
+
+    def step(state, xs):
+        xt, dtt, bt, ct = xs  # (B,H,P) (B,H) (B,N) (B,N)
+        decay = jnp.exp(dtt * Af[None, :])                      # (B,H)
+        inject = (dtt[..., None] * xt)[..., :, None] * bt[:, None, None, :]
+        state = decay[..., None, None] * state + inject         # (B,H,P,N)
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (x, dt, Bmat, Cmat))
+    state, ys = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+@jax.custom_vjp
+def mamba2_ssd_ref(x, dt, A, Bmat, Cmat, state0):
+    """Sequential SSD: per head h with state (P, N):
+      S_t = exp(dt_t * A_h) S_{t-1} + dt_t * x_t B_t^T ;  y_t = S_t C_t.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,) (negative); B,C: (B, S, N);
+    state0: (B, H, P, N).  Returns y (B,S,H,P), final state.
+    Linear-memory backward (chunked adjoint recurrence)."""
+    y, state = _ssd_fwd_scan(x, dt, A, Bmat, Cmat, state0)
+    return y.astype(x.dtype), state
+
+
+def _ssd_fwd(x, dt, A, Bmat, Cmat, state0):
+    B, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    c = _divisor_chunk(S, _SSD_CHUNK)
+    n = S // c
+    sp = lambda a, tail: jnp.moveaxis(
+        a.astype(jnp.float32).reshape((B, n, c) + tail), 1, 0)
+
+    def chunk_step(state, xs):
+        xc, dtc, bc, cc = xs
+        yc, new_state = _ssd_fwd_scan(xc, dtc, A, bc, cc, state)
+        return new_state, (yc, state)
+
+    state_f, (ys, boundaries) = jax.lax.scan(
+        chunk_step, state0.astype(jnp.float32),
+        (sp(x, (H, P)), sp(dt, (H,)), sp(Bmat, (N,)), sp(Cmat, (N,))))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    return (y.astype(x.dtype), state_f), (x, dt, A, Bmat, Cmat, boundaries, c)
+
+
+def _ssd_bwd(res, cts):
+    x, dt, A, Bmat, Cmat, boundaries, c = res
+    ybar, state_f_bar = cts
+    B, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    n = S // c
+    Af = A.astype(jnp.float32)
+    sp = lambda a, tail: jnp.moveaxis(
+        a.astype(jnp.float32).reshape((B, n, c) + tail), 1, 0)
+    xs_, dts, bs, cs, ybs = (sp(x, (H, P)), sp(dt, (H,)), sp(Bmat, (N,)),
+                             sp(Cmat, (N,)), sp(ybar, (H, P)))
+
+    def chunk_bwd(sbar, xs):
+        xc, dtc, bc, cc, ybc, s_boundary = xs
+
+        def fwd_step(state, t):
+            decay = jnp.exp(dtc[:, t] * Af[None])
+            inject = (dtc[:, t][..., None] * xc[:, t])[..., :, None] \
+                * bc[:, t][:, None, None, :]
+            return decay[..., None, None] * state + inject, state  # emit S_{t-1}
+
+        _, s_prevs = jax.lax.scan(fwd_step, s_boundary, jnp.arange(c))
+
+        def bwd_step(carry, t):
+            sbar, abar_acc = carry
+            ti = c - 1 - t
+            xt, dtt, bt, ct, yb = (xc[:, ti], dtc[:, ti], bc[:, ti], cc[:, ti],
+                                   ybc[:, ti])
+            s_prev = s_prevs[ti]
+            decay = jnp.exp(dtt * Af[None])                      # (B,H)
+            inject = (dtt[..., None] * xt)[..., :, None] * bt[:, None, None, :]
+            s_t = decay[..., None, None] * s_prev + inject
+            sbar_t = sbar + yb[..., :, None] * ct[:, None, None, :]
+            cbar = jnp.einsum("bhpn,bhp->bn", s_t, yb)
+            abar = jnp.einsum("bhpn,bhpn->bh", sbar_t, s_prev)   # d/d decay
+            dtbar = abar * decay * Af[None] \
+                + jnp.einsum("bhpn,bhp,bn->bh", sbar_t, xt, bt)
+            xbar = dtt[..., None] * jnp.einsum("bhpn,bn->bhp", sbar_t, bt)
+            bbar = jnp.einsum("bhpn,bhp->bn", sbar_t, dtt[..., None] * xt)
+            Abar = jnp.einsum("bh,bh->h", abar * decay, dtt)
+            sbar_prev = decay[..., None, None] * sbar_t
+            return (sbar_prev, abar_acc + Abar), (xbar, dtbar, bbar, cbar)
+
+        (sbar, Abar_c), grads = jax.lax.scan(
+            bwd_step, (sbar, jnp.zeros((H,), jnp.float32)), jnp.arange(c))
+        grads = tuple(jnp.moveaxis(g[::-1], 0, 1) for g in grads)
+        return sbar, (grads, Abar_c)
+
+    sbar0 = state_f_bar.astype(jnp.float32)
+    xs_rev = tuple(a[::-1] for a in (xs_, dts, bs, cs, ybs, boundaries))
+    sbar_final, ((xb, dtb, bb, cb), Abars) = jax.lax.scan(chunk_bwd, sbar0,
+                                                          xs_rev)
+    join = lambda g, tail: jnp.moveaxis(g[::-1], 0, 1).reshape((B, S) + tail)
+    return (join(xb, (H, P)).astype(x.dtype), join(dtb, (H,)).astype(dt.dtype),
+            Abars.sum(axis=0).astype(A.dtype),
+            join(bb, (N,)).astype(Bmat.dtype), join(cb, (N,)).astype(Cmat.dtype),
+            sbar_final)
+
+
+mamba2_ssd_ref.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def mamba2_step_ref(x, dt, A, Bvec, Cvec, state):
+    """Single decode step: x (B,H,P); dt (B,H); B,C (B,N); state (B,H,P,N)."""
+    decay = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32)[None, :])
+    inject = (dt.astype(jnp.float32)[..., None] * x.astype(jnp.float32))[..., :, None] \
+        * Bvec.astype(jnp.float32)[:, None, None, :]
+    state = decay[..., None, None] * state.astype(jnp.float32) + inject
+    y = jnp.einsum("bhpn,bn->bhp", state, Cvec.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Oblivious-forest inference (the ATLAS scheduling hot path)
+# ---------------------------------------------------------------------------
+
+def forest_infer_ref(x, feat_idx, thresholds, leaves):
+    """Gather-based oracle for oblivious-tree forest inference.
+
+    x: (B, F) features; feat_idx: (T, D) int32; thresholds: (T, D); leaves: (T, 2^D).
+    Tree t at level d tests  x[:, feat_idx[t, d]] > thresholds[t, d]; the D bits form
+    the leaf index (level 0 = MSB).  Output: (B,) mean leaf value over trees (a margin
+    score; sigmoid of it is P(task succeeds))."""
+    B, F = x.shape
+    T, D = feat_idx.shape
+    xf = x.astype(jnp.float32)
+    gathered = xf[:, feat_idx.reshape(-1)].reshape(B, T, D)
+    bits = (gathered > thresholds[None].astype(jnp.float32)).astype(jnp.int32)
+    weights = (2 ** jnp.arange(D - 1, -1, -1, dtype=jnp.int32))
+    leaf_idx = (bits * weights[None, None, :]).sum(-1)          # (B, T)
+    vals = jnp.take_along_axis(leaves.astype(jnp.float32)[None].repeat(B, 0),
+                               leaf_idx[..., None], axis=2)[..., 0]
+    return vals.mean(axis=1)

@@ -1,0 +1,86 @@
+"""RWKV6 (Finch) WKV recurrence as a Pallas TPU kernel.
+
+TPU adaptation: the (Dh x Dh) per-head state lives in VMEM scratch and persists
+across the sequential time-chunk grid axis; r/k/v/w stream HBM->VMEM in
+(chunk, Dh) tiles.  The recurrence is evaluated stepwise inside the chunk with a
+fori_loop over VREG-resident rank-1 updates — RWKV's per-channel data-dependent
+decay prevents the exp-factored chunked-matmul form from being numerically safe
+for unbounded decays (see ref.py for the oracle; EXPERIMENTS.md discusses the
+trade-off), so the kernel optimises memory traffic (state never leaves VMEM)
+rather than MXU occupancy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sf_ref, state, *,
+            chunk: int, n_chunks: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)          # (Dh,)
+
+    def step(t, carry):
+        rt = r_ref[0, 0, t].astype(jnp.float32)   # (Dh,)
+        kt = k_ref[0, 0, t].astype(jnp.float32)
+        vt = v_ref[0, 0, t].astype(jnp.float32)
+        wt = w_ref[0, 0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]            # (Dh, Dh)
+        yt = (rt[:, None] * (state[...] + u[:, None] * kv)).sum(axis=0)
+        y_ref[0, 0, t] = yt.astype(y_ref.dtype)
+        state[...] = wt[:, None] * state[...] + kv
+        return carry
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ti == n_chunks - 1)
+    def _finish():
+        sf_ref[0, 0] = state[...].astype(sf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, state0, *, chunk=128, interpret=False):
+    """r,k,v,w: (B, S, H, Dh); u: (H, Dh); state0: (B, H, Dh, Dh) fp32.
+    Returns (y (B,S,H,Dh), final state (B,H,Dh,Dh) fp32)."""
+    B, S, H, Dh = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    tr = lambda x: jnp.moveaxis(x, 1, 2)      # (B, H, S, Dh)
+    rt, kt, vt, wt = tr(r), tr(k), tr(v), tr(w)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, Dh), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, chunk, Dh), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, chunk, Dh), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, chunk, Dh), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, Dh), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, Dh, Dh), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, Dh), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, Dh, Dh), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, Dh), r.dtype),
+            jax.ShapeDtypeStruct((B, H, Dh, Dh), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dh, Dh), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u, state0)
+    return jnp.moveaxis(y, 2, 1), sf

@@ -1,0 +1,3 @@
+from repro.launch.mesh import data_shards, make_production_mesh, model_shards
+
+__all__ = ["data_shards", "make_production_mesh", "model_shards"]

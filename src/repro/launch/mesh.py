@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module never
+touches JAX device state — the dry-run sets XLA_FLAGS before any jax import."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the pod axis extends data
+    parallelism across pods (hierarchical gradient reduction)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_shards(mesh) -> int:
+    """Number of data-parallel shards (pod x data axes).  Uses mesh.shape so it
+    also works on AbstractMesh (no devices)."""
+    sizes = dict(mesh.shape)
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def model_shards(mesh) -> int:
+    return dict(mesh.shape).get("model", 1)

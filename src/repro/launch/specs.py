@@ -1,0 +1,130 @@
+"""Per-(arch x shape x mesh) lowering inputs: abstract values (ShapeDtypeStruct,
+zero allocation) + NamedShardings for the multi-pod dry-run and the roofline."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import data_shards
+from repro.models.layers import ShardCtx
+from repro.models.registry import get_model
+from repro.models.steps import (
+    abstract_train_state, make_decode_step, make_prefill_step, make_train_step,
+    train_state_axes,
+)
+from repro.models.lm import cache_axes as lm_cache_axes
+from repro.optim import adamw
+from repro.parallel.axes import logical_to_spec, make_rules, tree_spec
+
+
+def arch_rules(arch: ArchConfig, shape: ShapeConfig, mesh):
+    """Sharding rule table for this cell.
+
+    Inference KV caches shard along `kv_seq` over the model axis (GQA kv-heads are
+    usually too few for it; the full-cache einsum decode attention lets GSPMD do
+    the distributed partial-softmax merge).  Long-context decode with batch too
+    small for the data axes additionally spreads kv_seq over them."""
+    seq_par = shape.kind == "decode" and shape.global_batch < data_shards(mesh)
+    overrides = dict(arch.sharding_overrides)
+    if shape.kind in ("decode", "prefill"):
+        overrides.setdefault("kv_seq",
+                             ("data", "model") if seq_par else "model")
+    fsdp = arch.fsdp
+    if shape.kind == "decode" and arch.decode_fsdp is not None:
+        fsdp = arch.decode_fsdp  # e.g. vision-90b: per-layer FSDP regathers under
+        # the decode scan hoist the whole stacked weights; model-only sharding fits
+    return make_rules(fsdp=fsdp, shard_kv_heads=arch.shard_kv_heads,
+                      sequence_parallel=seq_par, overrides=overrides)
+
+
+def shard_ctx(arch: ArchConfig, shape: ShapeConfig, mesh) -> ShardCtx:
+    return ShardCtx(mesh=mesh, rules=arch_rules(arch, shape, mesh),
+                    n_groups=data_shards(mesh), impl="xla")
+
+
+def batch_specs(arch: ArchConfig, shape: ShapeConfig):
+    """Abstract input batch for this cell."""
+    model = get_model(arch)
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), jnp.int32)}
+        if model.needs_media():
+            batch["media"] = model.media_struct(B)
+        return batch
+    # decode: one new token against a cache of S
+    return {"tokens": sds((B, 1), jnp.int32), "pos": sds((B,), jnp.int32)}
+
+
+def batch_shardings(arch: ArchConfig, shape: ShapeConfig, mesh):
+    rules = arch_rules(arch, shape, mesh)
+    tok = NamedSharding(mesh, logical_to_spec(("batch", "seq"), rules, mesh))
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": tok}
+        if get_model(arch).needs_media():
+            out["media"] = NamedSharding(
+                mesh, logical_to_spec(("batch", "frames", None), rules, mesh))
+        return out
+    return {"tokens": NamedSharding(mesh, logical_to_spec(("batch", None),
+                                                          rules, mesh)),
+            "pos": NamedSharding(mesh, logical_to_spec(("batch",), rules, mesh))}
+
+
+def _sharding_tree(axes_tree, rules, mesh):
+    specs = tree_spec(axes_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: ArchConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, example_args_abstract, in_shardings, out_shardings, donate)
+    ready for jax.jit(...).lower()."""
+    model = get_model(arch)
+    rules = arch_rules(arch, shape, mesh)
+    ctx = shard_ctx(arch, shape, mesh)
+    opt_cfg = adamw.AdamWConfig(
+        moment_dtype="bf16" if arch.opt_dtype == "bf16" else "fp32")
+
+    if shape.kind == "train":
+        step, _ = make_train_step(arch, opt_cfg, ctx)
+        state = abstract_train_state(arch, opt_cfg)
+        state_shard = _sharding_tree(train_state_axes(arch), rules, mesh)
+        bshard = batch_shardings(arch, shape, mesh)
+        batch = batch_specs(arch, shape)
+        out_shard = (state_shard, None)  # metrics replicated
+        return dict(fn=step, args=(state, batch),
+                    in_shardings=(state_shard, bshard),
+                    out_shardings=out_shard, donate_argnums=(0,))
+
+    params = model.abstract_params()
+    params_shard = _sharding_tree(model.params_axes(), rules, mesh)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(arch, ctx)
+        batch = batch_specs(arch, shape)
+        bshard = batch_shardings(arch, shape, mesh)
+        cache_shard = _sharding_tree(model.cache_axes(), rules, mesh)
+        logits_shard = NamedSharding(
+            mesh, logical_to_spec(("batch", "vocab"), rules, mesh))
+        return dict(fn=step, args=(params, batch),
+                    in_shardings=(params_shard, bshard),
+                    out_shardings=(logits_shard, cache_shard),
+                    donate_argnums=())
+
+    # decode
+    step = make_decode_step(arch, ctx)
+    cache = model.cache_struct(shape.global_batch, shape.seq_len)
+    cache_shard = _sharding_tree(model.cache_axes(), rules, mesh)
+    b = batch_specs(arch, shape)
+    bshard = batch_shardings(arch, shape, mesh)
+    logits_shard = NamedSharding(mesh,
+                                 logical_to_spec(("batch", "vocab"), rules, mesh))
+    next_shard = NamedSharding(mesh, logical_to_spec(("batch",), rules, mesh))
+    return dict(fn=step, args=(params, cache, b["tokens"], b["pos"]),
+                in_shardings=(params_shard, cache_shard, bshard["tokens"],
+                              bshard["pos"]),
+                out_shardings=(next_shard, logits_shard, cache_shard),
+                donate_argnums=(1,))

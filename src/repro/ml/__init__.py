@@ -1,0 +1,6 @@
+from repro.ml.cv import cross_validate, metrics
+from repro.ml.forest import ForestParams, fit_oblivious_forest, forest_predict
+from repro.ml.models import ALL_MODELS
+
+__all__ = ["ALL_MODELS", "ForestParams", "cross_validate", "fit_oblivious_forest",
+           "forest_predict", "metrics"]

@@ -1,0 +1,163 @@
+"""Oblivious decision trees / forests in JAX — the training side of the ATLAS
+failure predictors.
+
+Oblivious trees (one (feature, threshold) test per level, CatBoost-style) were chosen
+deliberately: inference is gather-free and maps onto the MXU (see
+repro/kernels/forest.py).  Training is histogram-based and fully vectorised: all
+trees (and, for cross-validation, all folds) are fitted simultaneously as a batch of
+per-sample weight vectors — bootstrap resampling and fold masking are both just
+weights.
+
+The split criterion is weighted variance reduction, which for {0,1} targets is
+equivalent to Gini impurity up to a monotone transform; "ctree" mode normalises the
+gain by pooled variance (a t-statistic-like score), approximating conditional
+inference trees' test-based selection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ForestParams:
+    feat_idx: np.ndarray    # (T, D) int32
+    thresholds: np.ndarray  # (T, D) float32
+    leaves: np.ndarray      # (T, 2^D) float32  (mean target per leaf)
+
+
+def make_bins(X: np.ndarray, n_bins: int) -> np.ndarray:
+    """Per-feature candidate thresholds from quantiles: (F, Q)."""
+    qs = np.linspace(0.05, 0.95, n_bins)
+    thr = np.quantile(X, qs, axis=0).T.astype(np.float32)      # (F, Q)
+    # de-duplicate constant features (identical quantiles give zero-gain splits)
+    return thr
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves", "criterion"))
+def _best_split(bits, w, wy, wyy, leaf, *, n_leaves: int, criterion: str):
+    """One oblivious level for a batch of trees.
+
+    bits: (N, FQ) f32 — precomputed X[:,f] > thr[f,q] indicators.
+    w/wy/wyy: (T, N) — per-tree sample weights, weight*target, weight*target^2.
+    leaf: (T, N) int32 current leaf of each sample.
+    Returns (gain (T, FQ), best flat candidate per tree (T,)).
+    """
+    L = n_leaves
+
+    def per_tree(args):
+        wt, wyt, wyyt, lt = args
+        oh = jax.nn.one_hot(lt, L, dtype=jnp.float32)          # (N, L)
+        stacked = jnp.stack([wt, wyt, wyyt], axis=1)           # (N, 3)
+        tot = oh.T @ stacked                                   # (L, 3)
+        lw = (oh * wt[:, None]).T @ bits                       # (L, FQ)
+        ly = (oh * wyt[:, None]).T @ bits
+        lyy = (oh * wyyt[:, None]).T @ bits
+        rw = tot[:, 0:1] - lw
+        ry = tot[:, 1:2] - ly
+        ryy = tot[:, 2:3] - lyy
+        eps = 1e-9
+
+        def sse(s_w, s_y, s_yy):
+            return s_yy - s_y * s_y / jnp.maximum(s_w, eps)
+
+        parent = sse(tot[:, 0:1], tot[:, 1:2], tot[:, 2:3])
+        child = sse(lw, ly, lyy) + sse(rw, ry, ryy)
+        gain_l = parent - child                                # (L, FQ)
+        gain = gain_l.sum(axis=0)                              # (FQ,)
+        if criterion == "ctree":
+            pooled = child.sum(axis=0) / jnp.maximum(tot[:, 0].sum(), eps)
+            gain = gain / jnp.sqrt(pooled + eps)
+        # degenerate splits (all left / all right) get zero gain naturally
+        return gain
+
+    gains = jax.lax.map(per_tree, (w, wy, wyy, leaf))          # (T, FQ)
+    best = jnp.argmax(gains, axis=1)
+    return gains, best
+
+
+@functools.partial(jax.jit, static_argnames=("n_leaves",))
+def _leaf_values(w, wy, leaf, *, n_leaves: int):
+    def per_tree(args):
+        wt, wyt, lt = args
+        oh = jax.nn.one_hot(lt, n_leaves, dtype=jnp.float32)
+        sw = oh.T @ wt
+        sy = oh.T @ wyt
+        return sy / jnp.maximum(sw, 1e-9)
+    return jax.lax.map(per_tree, (w, wy, leaf))
+
+
+def fit_oblivious_forest(X: np.ndarray, y: np.ndarray, *, n_trees: int = 24,
+                         depth: int = 5, n_bins: int = 8, bootstrap: bool = True,
+                         criterion: str = "var", seed: int = 0,
+                         sample_weight: np.ndarray | None = None,
+                         fold_masks: np.ndarray | None = None) -> ForestParams:
+    """Fit T oblivious trees of given depth.
+
+    fold_masks: optional (K, N) {0,1} — trains T trees *per fold* in one batch
+    (weights zeroed on the fold's test samples); returns K*T trees ordered
+    fold-major.  This is how the 10-fold CV trains all folds in one shot.
+    """
+    N, F = X.shape
+    thr = make_bins(X, n_bins)                                 # (F, Q)
+    Q = thr.shape[1]
+    bits_np = (X[:, :, None] > thr[None]).astype(np.float32).reshape(N, F * Q)
+    bits = jnp.asarray(bits_np)
+
+    rng = np.random.RandomState(seed)
+    if fold_masks is None:
+        fold_masks = np.ones((1, N), np.float32)
+    K = fold_masks.shape[0]
+    T = n_trees * K
+    if bootstrap:
+        w0 = rng.poisson(1.0, size=(T, N)).astype(np.float32)
+    else:
+        w0 = np.ones((T, N), np.float32)
+    mask = np.repeat(fold_masks, n_trees, axis=0)              # (T, N) fold-major
+    w_np = w0 * mask
+    if sample_weight is not None:
+        w_np = w_np * sample_weight[None, :]
+
+    w = jnp.asarray(w_np)
+    yj = jnp.asarray(y, jnp.float32)
+    wy = w * yj[None]
+    wyy = wy * yj[None]
+    leaf = jnp.zeros((T, N), jnp.int32)
+
+    feat_idx = np.zeros((T, depth), np.int32)
+    thresholds = np.zeros((T, depth), np.float32)
+    thr_flat = thr.reshape(-1)
+    for d in range(depth):
+        _, best = _best_split(bits, w, wy, wyy, leaf,
+                              n_leaves=1 << d, criterion=criterion)
+        best = np.asarray(best)
+        feat_idx[:, d] = best // Q
+        thresholds[:, d] = thr_flat[best]
+        chosen_bits = jnp.take(bits, jnp.asarray(best), axis=1).T  # (T, N)
+        leaf = leaf * 2 + chosen_bits.astype(jnp.int32)
+
+    leaves = np.asarray(_leaf_values(w, wy, leaf, n_leaves=1 << depth))
+    # empty leaves fall back to the tree prior
+    prior = float(np.average(y, weights=np.maximum(w_np.sum(0), 1e-9)))
+    counts = np.asarray(
+        jax.vmap(lambda lt, wt: jax.ops.segment_sum(wt, lt, 1 << depth))(
+            leaf, w))
+    leaves = np.where(counts > 0, leaves, prior).astype(np.float32)
+    return ForestParams(feat_idx=feat_idx, thresholds=thresholds, leaves=leaves)
+
+
+def forest_predict(params: ForestParams, X: np.ndarray, *, impl: str = "xla",
+                   tree_slice: slice | None = None) -> np.ndarray:
+    """Mean leaf value over trees — a probability for {0,1} targets."""
+    from repro.kernels import ops
+    fi, th, lv = params.feat_idx, params.thresholds, params.leaves
+    if tree_slice is not None:
+        fi, th, lv = fi[tree_slice], th[tree_slice], lv[tree_slice]
+    out = ops.forest_infer(jnp.asarray(X, jnp.float32), jnp.asarray(fi),
+                           jnp.asarray(th), jnp.asarray(lv), impl=impl)
+    return np.asarray(out)

@@ -1,0 +1,5 @@
+from repro.models.registry import Model, active_param_count, get_model, param_count
+from repro.models.layers import NO_SHARD, ShardCtx, xent_loss
+
+__all__ = ["Model", "ShardCtx", "NO_SHARD", "active_param_count", "get_model",
+           "param_count", "xent_loss"]

@@ -1,0 +1,176 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The mel/conv frontend is a STUB per the assignment: inputs are precomputed frame
+embeddings (B, n_frames, d_model).  LayerNorm + GELU MLP + absolute sinusoidal
+positions (no RoPE), matching Whisper's transformer shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import NO_SHARD, ShardCtx
+from repro.models.lm import _remat, stack_defs
+
+
+def _sinusoid(S: int, D: int, offset=0):
+    pos = jnp.arange(S, dtype=jnp.float32) + offset
+    half = D // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None] * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_block_defs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.norm_defs(cfg.d_model, "layer"),
+        "attn": L.attn_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.resolved_head_dim),
+        "ln2": L.norm_defs(cfg.d_model, "layer"),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, kind="gelu"),
+    }
+
+
+def _dec_block_defs(cfg: ArchConfig) -> dict:
+    d = _enc_block_defs(cfg)
+    d["ln_x"] = L.norm_defs(cfg.d_model, "layer")
+    d["xattn"] = L.attn_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.resolved_head_dim)
+    return d
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    e = cfg.enc_dec
+    return {
+        "embed": L.embed_defs(cfg),
+        "enc_blocks": stack_defs(_enc_block_defs(cfg), e.n_enc_layers),
+        "enc_norm": L.norm_defs(cfg.d_model, "layer"),
+        "dec_blocks": stack_defs(_dec_block_defs(cfg), cfg.n_layers),
+        "final_norm": L.norm_defs(cfg.d_model, "layer"),
+    }
+
+
+def encode(params, cfg: ArchConfig, frames, ctx: ShardCtx = NO_SHARD):
+    """frames: (B, n_frames, d_model) stub embeddings -> (B, n_frames, d_model)."""
+    B, S, D = frames.shape
+    x = frames + _sinusoid(S, D).astype(frames.dtype)[None]
+    x = ctx.constrain(x, "batch", "frames", "embed")
+
+    def body(x, blk):
+        h = L.attn_apply(blk["attn"], L.norm_apply(blk["ln1"], x), positions=None,
+                         causal=False, ctx=ctx, use_rope=False)
+        x = x + h
+        return x + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_blocks"])
+    return L.norm_apply(params["enc_norm"], x)
+
+
+def _dec_block(cfg, blk, x, enc_out, positions, ctx):
+    h = L.attn_apply(blk["attn"], L.norm_apply(blk["ln1"], x), positions=positions,
+                     causal=True, ctx=ctx, use_rope=False)
+    x = x + h
+    h = L.attn_apply(blk["xattn"], L.norm_apply(blk["ln_x"], x), positions=None,
+                     causal=False, ctx=ctx, kv_x=enc_out, use_rope=False)
+    x = x + h
+    return x + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+
+
+def apply(params, cfg: ArchConfig, tokens, *, media=None, ctx: ShardCtx = NO_SHARD,
+          pos_offset=0, return_hidden=False):
+    """Full-seq teacher-forced decode over `tokens` given `media` frames.
+    Returns (logits (B,S,V) fp32, aux 0.0)."""
+    assert media is not None, "whisper needs frame embeddings"
+    enc_out = encode(params, cfg, media, ctx)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S) + pos_offset, (B, S))
+    x = L.embed_apply(params["embed"], tokens, ctx)
+    x = x + _sinusoid(S, cfg.d_model, pos_offset).astype(x.dtype)[None]
+
+    def body(x, blk):
+        return _dec_block(cfg, blk, x, enc_out, positions, ctx), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_blocks"])
+    x = L.norm_apply(params["final_norm"], x)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    return L.lm_head_apply(params["embed"], x, ctx), jnp.zeros((), jnp.float32)
+
+
+def cache_struct(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    hd = cfg.resolved_head_dim
+    e = cfg.enc_dec
+    sds = jax.ShapeDtypeStruct
+    kv = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    xkv = (cfg.n_layers, batch, e.n_frames, cfg.n_kv_heads, hd)
+    return {"k": sds(kv, cfg.dtype), "v": sds(kv, cfg.dtype),
+            "xk": sds(xkv, cfg.dtype), "xv": sds(xkv, cfg.dtype)}
+
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    xkv = ("layers", "batch", "frames", "kv_heads", "head_dim")
+    return {"k": kv, "v": kv, "xk": xkv, "xv": xkv}
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, media=None,
+            ctx: ShardCtx = NO_SHARD, max_len: int | None = None):
+    assert media is not None
+    enc_out = encode(params, cfg, media, ctx)
+    B, S = tokens.shape
+    max_len = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = L.embed_apply(params["embed"], tokens, ctx)
+    x = x + _sinusoid(S, cfg.d_model).astype(x.dtype)[None]
+
+    def body(x, blk):
+        h, kv = L.attn_prefill(blk["attn"], L.norm_apply(blk["ln1"], x),
+                               positions=positions, theta=0.0, ctx=ctx,
+                               cache_len=max_len, use_rope=False)
+        x = x + h
+        xk = jnp.einsum("bmd,dhk->bmhk", enc_out, blk["xattn"]["wk"])
+        xv = jnp.einsum("bmd,dhk->bmhk", enc_out, blk["xattn"]["wv"])
+        h = L.attn_apply(blk["xattn"], L.norm_apply(blk["ln_x"], x), positions=None,
+                         causal=False, ctx=ctx, kv_x=enc_out, use_rope=False)
+        x = x + h
+        x = x + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+        return x, (kv[0], kv[1], xk, xv)
+
+    x, (k, v, xk, xv) = jax.lax.scan(_remat(body, cfg), x, params["dec_blocks"])
+    x = L.norm_apply(params["final_norm"], x)
+    logits = L.lm_head_apply(params["embed"], x[:, -1:], ctx)
+    return logits[:, 0], {"k": k, "v": v, "xk": xk, "xv": xv}
+
+
+def decode(params, cfg: ArchConfig, cache, tokens, pos, *,
+           ctx: ShardCtx = NO_SHARD):
+    B = tokens.shape[0]
+    x = L.embed_apply(params["embed"], tokens, ctx)
+    # positions differ per sequence; add sinusoid at pos per row
+    D = cfg.d_model
+    half = D // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None]
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    x = x + pe[:, None].astype(x.dtype)
+
+    def body(x, xs):
+        blk, ck, cv, xk, xv = xs
+        h, (nk, nv) = L.attn_decode(blk["attn"], L.norm_apply(blk["ln1"], x),
+                                    ck, cv, pos, theta=0.0, ctx=ctx, use_rope=False)
+        x = x + h
+        h, _ = L.attn_decode(blk["xattn"], L.norm_apply(blk["ln_x"], x), None, None,
+                             pos, theta=0.0, ctx=ctx, cross_kv=(xk, xv))
+        x = x + h
+        x = x + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+        return x, (nk, nv)
+
+    x, kvs = jax.lax.scan(body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                                    cache["xk"], cache["xv"]))
+    x = L.norm_apply(params["final_norm"], x)
+    logits = L.lm_head_apply(params["embed"], x, ctx)
+    return logits[:, 0], {"k": kvs[0], "v": kvs[1],
+                          "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,518 @@
+"""Model-zoo building blocks, pure JAX.
+
+Every block exposes ``<block>_defs(...) -> pytree[ParamDef]`` and apply functions.
+Parameters carry logical axis names (see repro.parallel.axes); activation sharding
+constraints go through a ShardCtx so the same code runs unsharded on CPU and fully
+sharded on the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.parallel.axes import ParamDef, logical_to_spec
+
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Carries mesh + logical rules + runtime knobs into model apply functions."""
+    mesh: Mesh | None = None
+    rules: Mapping[str, Any] | None = None
+    n_groups: int = 1          # MoE dispatch groups (== data-shard count on a mesh)
+    impl: str | None = None    # kernel impl override (xla | pallas | interpret)
+
+    def constrain(self, x, *axes):
+        if self.mesh is None or self.rules is None:
+            return x
+        spec = logical_to_spec(axes, self.rules, self.mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+NO_SHARD = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_defs(dim: int, kind: str = "rms") -> dict:
+    d = {"scale": ParamDef((dim,), ("embed",), init="ones")}
+    if kind == "layer":
+        d["bias"] = ParamDef((dim,), ("embed",), init="zeros")
+    return d
+
+
+def norm_apply(p: dict, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # LayerNorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # RMSNorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def group_norm_apply(scale, x, n_groups: int, eps: float = 1e-5):
+    """Per-head group norm over the last dim reshaped to groups (RWKV6 ln_x)."""
+    B, S, D = x.shape
+    xf = x.astype(jnp.float32).reshape(B, S, n_groups, D // n_groups)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(B, S, D)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_apply(x, positions, theta: float):
+    """x: (..., S, H, D) with positions (..., S) or (S,). Rotates pairs (d, d+D/2)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (self / cross, full-seq / cached decode)
+# ---------------------------------------------------------------------------
+
+def attn_defs(d_model: int, n_heads: int, n_kv: int, head_dim: int) -> dict:
+    return {
+        "wq": ParamDef((d_model, n_heads, head_dim), ("embed", "heads", "head_dim"),
+                       init="scaled"),
+        "wk": ParamDef((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim"),
+                       init="scaled"),
+        "wv": ParamDef((d_model, n_kv, head_dim), ("embed", "kv_heads", "head_dim"),
+                       init="scaled"),
+        "wo": ParamDef((n_heads, head_dim, d_model), ("heads", "head_dim", "embed"),
+                       init="scaled"),
+    }
+
+
+def _qkv(p, x, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    return q, k, v
+
+
+def attn_apply(p, x, *, positions=None, theta=10000.0, causal=True, window=0,
+               ctx: ShardCtx = NO_SHARD, kv_x=None, use_rope=True):
+    """Full-sequence attention.  kv_x != None -> cross attention (no rope on kv side
+    unless positions provided for it; vision/audio tokens are position-free here)."""
+    q, k, v = _qkv(p, x, kv_x)
+    if use_rope and positions is not None:
+        q = rope_apply(q, positions, theta)
+        if kv_x is None:
+            k = rope_apply(k, positions, theta)
+    q = ctx.constrain(q, "batch", "seq", "heads", "head_dim")
+    k = ctx.constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    out = ops.flash_attention(q, k, v, causal=causal and kv_x is None,
+                              window=window, impl=ctx.impl)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return ctx.constrain(y, "batch", "seq", "embed")
+
+
+def attn_prefill(p, x, *, positions, theta, causal=True, window=0,
+                 ctx: ShardCtx = NO_SHARD, cache_len: int, use_rope=True):
+    """Full-seq attention that also emits a right-padded KV cache of length cache_len."""
+    q, k, v = _qkv(p, x)
+    if use_rope:
+        q = rope_apply(q, positions, theta)
+        k = rope_apply(k, positions, theta)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, impl=ctx.impl)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    S = x.shape[1]
+    pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+    return ctx.constrain(y, "batch", "seq", "embed"), \
+        (jnp.pad(k, pad), jnp.pad(v, pad))
+
+
+def attn_decode(p, x, cache_k, cache_v, pos, *, theta, window=0,
+                ctx: ShardCtx = NO_SHARD, use_rope=True, cross_kv=None):
+    """Single-token decode.  x: (B, 1, D); cache_k/v: (B, Smax, Hkv, Dh);
+    pos: (B,) number of tokens already in the cache.  Returns y, (new_k, new_v)."""
+    if cross_kv is not None:  # cross-attention: static KV, no cache update
+        ck, cv = cross_kv
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        kv_len = jnp.full((x.shape[0],), ck.shape[1], jnp.int32)
+        out = ops.decode_attention(q, ck, cv, kv_len, impl=ctx.impl)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        return ctx.constrain(y, "batch", "seq", "embed"), (cache_k, cache_v)
+
+    q, k, v = _qkv(p, x)
+    if use_rope:
+        q = rope_apply(q, pos[:, None], theta)
+        k = rope_apply(k, pos[:, None], theta)
+    B = x.shape[0]
+    # scatter the new row at position `pos` (per sequence)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, pos].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, pos].set(v[:, 0].astype(cache_v.dtype))
+    cache_k = ctx.constrain(cache_k, "batch", "kv_seq", "kv_heads", "head_dim")
+    cache_v = ctx.constrain(cache_v, "batch", "kv_seq", "kv_heads", "head_dim")
+    out = ops.decode_attention(q, cache_k, cache_v, pos + 1, window=window,
+                               impl=ctx.impl)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return ctx.constrain(y, "batch", "seq", "embed"), (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d_model: int, d_ff: int, kind: str = "swiglu") -> dict:
+    d = {
+        "wu": ParamDef((d_model, d_ff), ("embed", "ff"), init="scaled"),
+        "wd": ParamDef((d_ff, d_model), ("ff", "embed"), init="scaled"),
+    }
+    if kind == "swiglu":
+        d["wg"] = ParamDef((d_model, d_ff), ("embed", "ff"), init="scaled")
+    return d
+
+
+def mlp_apply(p, x, ctx: ShardCtx = NO_SHARD):
+    up = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    if "wg" in p:
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"]).astype(jnp.float32))
+        h = h.astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    h = ctx.constrain(h, "batch", "seq", "ff")
+    return ctx.constrain(jnp.einsum("bsf,fd->bsd", h, p["wd"]),
+                         "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based token dispatch, capacity-bounded)
+# ---------------------------------------------------------------------------
+
+def moe_defs(cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d_model = cfg.d_model
+    d = {
+        "router": ParamDef((d_model, m.n_experts), ("embed", "experts"),
+                           init="scaled", scale=0.1),
+        "wg": ParamDef((m.n_experts, d_model, m.expert_ff),
+                       ("experts", "embed", "expert_ff"), init="scaled"),
+        "wu": ParamDef((m.n_experts, d_model, m.expert_ff),
+                       ("experts", "embed", "expert_ff"), init="scaled"),
+        "wd": ParamDef((m.n_experts, m.expert_ff, d_model),
+                       ("experts", "expert_ff", "embed"), init="scaled"),
+    }
+    if m.n_shared_experts:
+        d["shared"] = mlp_defs(d_model, m.n_shared_experts * m.expert_ff)
+    return d
+
+
+def moe_apply(p, x, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD, dropless=False):
+    """x: (B, S, D).  Tokens are grouped into ctx.n_groups groups (== data shards on
+    a mesh) so routing/sorting stays shard-local under GSPMD; experts are sharded
+    over the model axis (EP).  Capacity-bounded: overflow tokens are dropped (they
+    keep the shared-expert/residual path).  ``dropless=True`` sets capacity to the
+    worst case (decode path: serving must be deterministic w.r.t. batch makeup)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    G = min(ctx.n_groups, T)
+    while T % G:
+        G -= 1
+    Tg = T // G
+    # token chunking: serialise dispatch over sub-chunks so the (Tg*K, D) gather /
+    # scatter buffers stay bounded at long sequence lengths (qwen3 prefill_32k)
+    if m.chunk_tokens and Tg > m.chunk_tokens:
+        sub = m.chunk_tokens
+        while Tg % sub:
+            sub -= 1
+        n_sub = Tg // sub
+
+        xs = jnp.moveaxis(x.reshape(G, n_sub, sub, D), 1, 0)  # (n_sub,G,sub,D)
+
+        def body(_, xc):
+            # xc (G, sub, D) re-enters as batch=G x seq=sub; ctx.n_groups == G so
+            # the inner call keeps the same shard-local grouping and cannot
+            # re-chunk (sub <= chunk_tokens)
+            y, aux = moe_apply(p, xc, cfg, ctx, dropless=dropless)
+            return None, (y, aux)
+
+        _, (ys, auxs) = jax.lax.scan(body, None, xs)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+        return y, auxs.mean()
+    E, K = m.n_experts, m.top_k
+    if dropless:
+        C = Tg * K
+    else:
+        C = min(max(1, int(m.capacity_factor * Tg * K / E)), Tg * K)
+
+    xt = x.reshape(G, Tg, D)
+    xt = ctx.constrain(xt, "batch", None, "embed")
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, K)                      # (G, Tg, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # --- load-balance auxiliary loss (Switch-style), counted pre-drop
+    me = probs.mean(axis=(0, 1))                              # (E,)
+    one_hot_top1 = jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=(0, 1))
+    aux_loss = (me * ce).sum() * E * m.router_aux_weight
+
+    # --- sort-based dispatch, per group
+    def dispatch(xg, topi_g, topv_g):
+        # xg (Tg, D); topi/topv (Tg, K)
+        eid = topi_g.reshape(-1)                              # (Tg*K,)
+        w = topv_g.reshape(-1)
+        tok = jnp.repeat(jnp.arange(Tg), K)
+        order = jnp.argsort(eid, stable=True)
+        eid_s, tok_s, w_s = eid[order], tok[order], w[order]
+        counts = jnp.zeros((E,), jnp.int32).at[eid].add(1)
+        offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(counts)[:-1]])
+        slot = jnp.arange(Tg * K) - offsets[eid_s]
+        keep = slot < C
+        slot_c = jnp.where(keep, slot, 0)
+        gathered = xg[tok_s] * keep[:, None].astype(xg.dtype)
+        xin = jnp.zeros((E, C, D), xg.dtype).at[eid_s, slot_c].add(
+            gathered, mode="drop")
+        return xin, (eid_s, tok_s, w_s, slot_c, keep)
+
+    xin, route = jax.vmap(dispatch)(xt, topi, topv)           # (G, E, C, D)
+    xin = ctx.constrain(xin, "batch", "experts", None, "embed")
+
+    # --- expert FFN (EP over 'model' via the experts axis)
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["wg"]).astype(jnp.float32))
+    up = jnp.einsum("gecd,edf->gecf", xin, p["wu"])
+    h = (gate.astype(x.dtype) * up)
+    h = ctx.constrain(h, "batch", "experts", None, "expert_ff")
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    out_e = ctx.constrain(out_e, "batch", "experts", None, "embed")
+
+    # --- combine back
+    def combine(out_g, route_g):
+        eid_s, tok_s, w_s, slot_c, keep = route_g
+        vals = out_g[eid_s, slot_c] * (w_s * keep.astype(jnp.float32)).astype(
+            out_g.dtype)[:, None]
+        return jnp.zeros((Tg, D), out_g.dtype).at[tok_s].add(vals)
+
+    y = jax.vmap(combine)(out_e, route).reshape(B, S, D)
+
+    if m.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, ctx)
+    return ctx.constrain(y, "batch", "seq", "embed"), aux_loss
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+def rwkv_heads(cfg: ArchConfig) -> int:
+    """RWKV time-mix heads are d_model / head_dim (projections are D->D)."""
+    return cfg.d_model // cfg.ssm.head_dim
+
+
+def rwkv6_defs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    s = cfg.ssm
+    n_mix = 5  # r, k, v, w, g
+    return {
+        "tm": {  # time mix
+            "mu": ParamDef((n_mix, D), (None, "embed"), init="zeros"),
+            "mix_w1": ParamDef((D, n_mix * s.lora_mix), ("embed", None), init="scaled"),
+            "mix_w2": ParamDef((n_mix, s.lora_mix, D), (None, None, "embed"),
+                               init="scaled", scale=0.1),
+            "decay0": ParamDef((D,), ("embed",), init="zeros"),
+            "decay_w1": ParamDef((D, s.lora_decay), ("embed", None), init="scaled"),
+            "decay_w2": ParamDef((s.lora_decay, D), (None, "embed"),
+                                 init="scaled", scale=0.1),
+            "bonus": ParamDef((rwkv_heads(cfg), s.head_dim), ("heads", "head_dim"),
+                              init="zeros"),
+            "wr": ParamDef((D, D), ("embed", "heads_x_dim"), init="scaled"),
+            "wk": ParamDef((D, D), ("embed", "heads_x_dim"), init="scaled"),
+            "wv": ParamDef((D, D), ("embed", "heads_x_dim"), init="scaled"),
+            "wg": ParamDef((D, D), ("embed", "heads_x_dim"), init="scaled"),
+            "wo": ParamDef((D, D), ("heads_x_dim", "embed"), init="scaled"),
+            "ln_x": ParamDef((D,), ("embed",), init="ones"),
+        },
+        "cm": {  # channel mix
+            "mu_k": ParamDef((D,), ("embed",), init="zeros"),
+            "mu_r": ParamDef((D,), ("embed",), init="zeros"),
+            "wk": ParamDef((D, cfg.d_ff), ("embed", "ff"), init="scaled"),
+            "wv": ParamDef((cfg.d_ff, D), ("ff", "embed"), init="scaled"),
+            "wr": ParamDef((D, D), ("embed", "heads_x_dim"), init="scaled"),
+        },
+    }
+
+
+def _rwkv6_projections(p, x, x_prev, cfg: ArchConfig):
+    """Shared between train scan and decode step.  x, x_prev: (B, S, D)."""
+    s = cfg.ssm
+    H, Dh = rwkv_heads(cfg), s.head_dim
+    B, S, D = x.shape
+    delta = x_prev - x
+    # data-dependent token-shift amounts (5 lerp amounts via LoRA)
+    mix_in = jnp.tanh(jnp.einsum("bsd,dr->bsr", x + 0.5 * delta, p["tm"]["mix_w1"])
+                      .astype(jnp.float32)).astype(x.dtype)
+    mix_in = mix_in.reshape(B, S, 5, s.lora_mix)
+    dyn = jnp.einsum("bsnr,nrd->nbsd", mix_in, p["tm"]["mix_w2"])
+    mu = p["tm"]["mu"][:, None, None, :].astype(x.dtype)
+    xs = x[None] + delta[None] * (mu + dyn)                   # (5, B, S, D)
+    xr, xk, xv, xw, xg = xs[0], xs[1], xs[2], xs[3], xs[4]
+    r = jnp.einsum("bsd,de->bse", xr, p["tm"]["wr"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,de->bse", xk, p["tm"]["wk"]).reshape(B, S, H, Dh)
+    v = jnp.einsum("bsd,de->bse", xv, p["tm"]["wv"]).reshape(B, S, H, Dh)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["tm"]["wg"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    dec = p["tm"]["decay0"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dr->bsr", jnp.tanh(xw.astype(jnp.float32)),
+        p["tm"]["decay_w1"].astype(jnp.float32)) @ p["tm"]["decay_w2"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec.clip(-20.0, 10.0))).reshape(B, S, H, Dh)  # in (0,1)
+    return r, k, v, w, g
+
+
+def rwkv6_time_mix(p, x, x_prev_row, state0, cfg: ArchConfig,
+                   ctx: ShardCtx = NO_SHARD):
+    """Full-seq time mix.  x: (B,S,D); x_prev_row: (B,D) last token of the previous
+    segment (zeros at start); state0: (B,H,Dh,Dh).  Returns y, (last_x, state)."""
+    B, S, D = x.shape
+    x_prev = jnp.concatenate([x_prev_row[:, None], x[:, :-1]], axis=1)
+    r, k, v, w, g = _rwkv6_projections(p, x, x_prev, cfg)
+    u = p["tm"]["bonus"]
+    y, state = ops.rwkv6_scan(r, k, v, w.astype(r.dtype), u, state0, impl=ctx.impl)
+    y = y.reshape(B, S, D)
+    y = group_norm_apply(p["tm"]["ln_x"], y, rwkv_heads(cfg))
+    y = jnp.einsum("bse,ed->bsd", y * g, p["tm"]["wo"])
+    return ctx.constrain(y, "batch", "seq", "embed"), (x[:, -1], state)
+
+
+def rwkv6_channel_mix(p, x, x_prev_row):
+    """x: (B,S,D); returns y, last_x."""
+    x_prev = jnp.concatenate([x_prev_row[:, None], x[:, :-1]], axis=1)
+    delta = x_prev - x
+    xk = x + delta * p["cm"]["mu_k"].astype(x.dtype)
+    xr = x + delta * p["cm"]["mu_r"].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["cm"]["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    v = jnp.einsum("bsf,fd->bsd", k, p["cm"]["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm"]["wr"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    return r * v, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_defs(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner = s.expand * D
+    H = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim
+    return {
+        "in_proj": ParamDef((D, 2 * d_inner + 2 * s.state_dim + H),
+                            ("embed", "heads_x_dim"), init="scaled"),
+        "conv_w": ParamDef((s.conv_width, conv_ch), ("conv", "heads_x_dim"),
+                           init="scaled", scale=0.5),
+        "conv_b": ParamDef((conv_ch,), ("heads_x_dim",), init="zeros"),
+        "a_log": ParamDef((H,), ("heads",), init="zeros"),
+        "dt_bias": ParamDef((H,), ("heads",), init="zeros"),
+        "d_skip": ParamDef((H,), ("heads",), init="ones"),
+        "norm": ParamDef((d_inner,), ("heads_x_dim",), init="ones"),
+        "out_proj": ParamDef((d_inner, D), ("heads_x_dim", "embed"), init="scaled"),
+    }
+
+
+def _mamba2_split(p, x, cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    N = s.state_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xbc, dt, d_inner, H, N
+
+
+def mamba2_apply(p, x, conv_state0, ssd_state0, cfg: ArchConfig,
+                 ctx: ShardCtx = NO_SHARD):
+    """Full-seq Mamba2 block.  conv_state0: (B, conv_w-1, conv_ch) left context;
+    ssd_state0: (B, H, P, N).  Returns y, (conv_state, ssd_state)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    z, xbc, dt, d_inner, H, N = _mamba2_split(p, x, cfg)
+    # causal conv over seq with carried left context
+    seq = jnp.concatenate([conv_state0.astype(xbc.dtype), xbc], axis=1)
+    kernel = p["conv_w"]
+    conv = sum(seq[:, i:i + S] * kernel[i][None, None] for i in range(s.conv_width))
+    conv = jax.nn.silu((conv + p["conv_b"][None, None]).astype(jnp.float32)
+                       ).astype(x.dtype)
+    x_ssm, Bmat, Cmat = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+    xh = x_ssm.reshape(B, S, H, s.head_dim)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, ssd_state = ops.mamba2_ssd(xh, dtf.astype(x.dtype), A.astype(jnp.float32),
+                                  Bmat, Cmat, ssd_state0, impl=ctx.impl)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = group_norm_apply(p["norm"], y, H)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    conv_state = seq[:, S:]  # last conv_w-1 rows
+    return ctx.constrain(out, "batch", "seq", "embed"), (conv_state, ssd_state)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg: ArchConfig) -> dict:
+    d = {"embedding": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                               init="normal")}
+    if not cfg.tie_embeddings:
+        d["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                                init="scaled")
+    return d
+
+
+def embed_apply(p, tokens, ctx: ShardCtx = NO_SHARD):
+    y = p["embedding"][tokens]
+    return ctx.constrain(y, "batch", "seq", "embed")
+
+
+def lm_head_apply(p, x, ctx: ShardCtx = NO_SHARD):
+    if "lm_head" in p:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embedding"])
+    return ctx.constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
+
+
+def xent_loss(logits, targets, mask=None):
+    """Stable CE; logits (B,S,V) fp32, targets (B,S) int32."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,676 @@
+"""Decoder-only LM assembly for families: dense, moe, ssm (RWKV6), hybrid
+(Mamba2 + shared attention, Zamba2-style), vlm (cross-attn image layers).
+
+All layer stacks are `lax.scan`-ed over stacked parameters (keeps HLO size
+O(1) in depth — essential for 94-100 layer archs at 512 devices) with remat
+per the config.  Three entry points per family:
+
+  apply(params, batch, ctx)        full-seq forward -> (logits, aux_loss)
+  prefill(params, batch, ctx)      full-seq forward -> (logits_last, cache)
+  decode(params, cache, batch,ctx) one-token step   -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import NO_SHARD, ShardCtx
+from repro.parallel.axes import ParamDef, is_param_def
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def stack_defs(defs: Any, n: int) -> Any:
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes,
+                           dtype=d.dtype, init=d.init, scale=d.scale),
+        defs, is_leaf=is_param_def)
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _slice_tree(tree, lo, hi):
+    return jax.tree.map(lambda p: p[lo:hi], tree)
+
+
+def _positions(B, S, offset=0):
+    return jnp.broadcast_to(jnp.arange(S) + offset, (B, S))
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions per family
+# ---------------------------------------------------------------------------
+
+def _dense_block_defs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.norm_defs(cfg.d_model),
+        "attn": L.attn_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.resolved_head_dim),
+        "ln2": L.norm_defs(cfg.d_model),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _moe_block_defs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.norm_defs(cfg.d_model),
+        "attn": L.attn_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.resolved_head_dim),
+        "ln2": L.norm_defs(cfg.d_model),
+        "moe": L.moe_defs(cfg),
+    }
+
+
+def _dense_fallback_ff(cfg: ArchConfig) -> int:
+    # deepseek-style: the leading dense layer matches the activated expert width
+    m = cfg.moe
+    return (m.top_k + m.n_shared_experts) * m.expert_ff
+
+
+def _rwkv_block_defs(cfg: ArchConfig) -> dict:
+    d = L.rwkv6_defs(cfg)
+    d["ln1"] = L.norm_defs(cfg.d_model)
+    d["ln2"] = L.norm_defs(cfg.d_model)
+    return d
+
+
+def _mamba_block_defs(cfg: ArchConfig) -> dict:
+    return {"ln": L.norm_defs(cfg.d_model), "mamba": L.mamba2_defs(cfg)}
+
+
+def _shared_attn_defs(cfg: ArchConfig) -> dict:
+    h = cfg.hybrid
+    hd = cfg.d_model // h.shared_attn_heads
+    return {
+        "ln1": L.norm_defs(cfg.d_model),
+        "attn": L.attn_defs(cfg.d_model, h.shared_attn_heads, h.shared_attn_heads, hd),
+        "ln2": L.norm_defs(cfg.d_model),
+        "mlp": L.mlp_defs(cfg.d_model, h.shared_attn_ff),
+    }
+
+
+def _cross_block_defs(cfg: ArchConfig) -> dict:
+    d = _dense_block_defs(cfg)
+    d["gate_attn"] = ParamDef((1,), (None,), init="zeros")
+    d["gate_mlp"] = ParamDef((1,), (None,), init="zeros")
+    return d
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    p: dict = {"embed": L.embed_defs(cfg), "final_norm": L.norm_defs(cfg.d_model)}
+    if cfg.family == "dense":
+        p["blocks"] = stack_defs(_dense_block_defs(cfg), cfg.n_layers)
+    elif cfg.family == "moe":
+        nd = cfg.moe.first_dense
+        if nd:
+            dense = dict(_moe_block_defs(cfg))
+            dense.pop("moe")
+            dense["mlp"] = L.mlp_defs(cfg.d_model, _dense_fallback_ff(cfg))
+            p["dense0"] = stack_defs(dense, nd)
+        p["blocks"] = stack_defs(_moe_block_defs(cfg), cfg.n_layers - nd)
+    elif cfg.family == "ssm":
+        p["ln0"] = L.norm_defs(cfg.d_model)
+        p["blocks"] = stack_defs(_rwkv_block_defs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        p["blocks"] = stack_defs(_mamba_block_defs(cfg), cfg.n_layers)
+        p["shared"] = _shared_attn_defs(cfg)
+    elif cfg.family == "vlm":
+        period = cfg.cross_attn.period
+        n_cross = cfg.n_layers // period
+        n_self = cfg.n_layers - n_cross
+        p["self_blocks"] = stack_defs(_dense_block_defs(cfg), n_self)
+        p["cross_blocks"] = stack_defs(_cross_block_defs(cfg), n_cross)
+    else:
+        raise ValueError(f"family {cfg.family} not handled by lm.py")
+    return p
+
+
+def _hybrid_groups(cfg: ArchConfig) -> list[tuple[int, int]]:
+    """Static (lo, hi) mamba-layer slices; the shared block runs before each."""
+    period = cfg.hybrid.period
+    return [(lo, min(lo + period, cfg.n_layers))
+            for lo in range(0, cfg.n_layers, period)]
+
+
+def n_shared_invocations(cfg: ArchConfig) -> int:
+    return len(_hybrid_groups(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / the body of prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_block_apply(cfg, blk, x, positions, ctx, window=None):
+    w = cfg.sliding_window if window is None else window
+    h = L.attn_apply(blk["attn"], L.norm_apply(blk["ln1"], x), positions=positions,
+                     theta=cfg.rope_theta, causal=cfg.causal, window=w, ctx=ctx)
+    x = x + h
+    x = x + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+    return x
+
+
+def _moe_block_apply(cfg, blk, x, positions, ctx):
+    h = L.attn_apply(blk["attn"], L.norm_apply(blk["ln1"], x), positions=positions,
+                     theta=cfg.rope_theta, causal=cfg.causal,
+                     window=cfg.sliding_window, ctx=ctx)
+    x = x + h
+    y, aux = L.moe_apply(blk["moe"], L.norm_apply(blk["ln2"], x), cfg, ctx)
+    return x + y, aux
+
+
+def _rwkv_block_apply(cfg, blk, x, tm_prev, cm_prev, state0, ctx):
+    h, (tm_last, state) = L.rwkv6_time_mix(
+        blk, L.norm_apply(blk["ln1"], x), tm_prev, state0, cfg, ctx)
+    x = x + h
+    h, cm_last = L.rwkv6_channel_mix(blk, L.norm_apply(blk["ln2"], x), cm_prev)
+    return x + h, tm_last, cm_last, state
+
+
+def _mamba_block_apply(cfg, blk, x, conv0, ssd0, ctx):
+    h, (conv_s, ssd_s) = L.mamba2_apply(blk["mamba"], L.norm_apply(blk["ln"], x),
+                                        conv0, ssd0, cfg, ctx)
+    return x + h, conv_s, ssd_s
+
+
+def _shared_block_apply(cfg, p, x, positions, ctx):
+    h = cfg.hybrid
+    blk = p["shared"]
+    y = L.attn_apply(blk["attn"], L.norm_apply(blk["ln1"], x), positions=positions,
+                     theta=cfg.rope_theta, causal=True,
+                     window=cfg.sliding_window, ctx=ctx)
+    x = x + y
+    return x + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+
+
+def _cross_block_apply(cfg, blk, x, media, ctx):
+    h = L.attn_apply(blk["attn"], L.norm_apply(blk["ln1"], x), positions=None,
+                     causal=False, ctx=ctx, kv_x=media, use_rope=False)
+    x = x + jnp.tanh(blk["gate_attn"].astype(jnp.float32)).astype(x.dtype) * h
+    h = L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+    return x + jnp.tanh(blk["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * h
+
+
+def apply(params, cfg: ArchConfig, tokens, *, media=None, ctx: ShardCtx = NO_SHARD,
+          pos_offset=0, return_hidden=False):
+    """Full-sequence forward.  tokens (B, S) int32; media (B, M, D) for vlm.
+    Returns (logits (B,S,V) fp32, aux_loss scalar); with return_hidden=True the
+    first element is the final-norm hidden state instead (the train step computes
+    the LM loss in sequence chunks so the full fp32 logits never materialise)."""
+    B, S = tokens.shape
+    positions = _positions(B, S, pos_offset)
+    x = L.embed_apply(params["embed"], tokens, ctx)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "dense":
+        def body(x, blk):
+            return _dense_block_apply(cfg, blk, x, positions, ctx), None
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+
+    elif cfg.family == "moe":
+        if "dense0" in params:
+            def body0(x, blk):
+                return _dense_block_apply(cfg, blk, x, positions, ctx), None
+            x, _ = jax.lax.scan(_remat(body0, cfg), x, params["dense0"])
+
+        def body(x, blk):
+            x, aux = _moe_block_apply(cfg, blk, x, positions, ctx)
+            return x, aux
+        x, auxs = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+        aux_total = aux_total + auxs.sum()
+
+    elif cfg.family == "ssm":
+        x = L.norm_apply(params["ln0"], x)
+        s = cfg.ssm
+        H, Dh = L.rwkv_heads(cfg), s.head_dim
+        zeros_prev = jnp.zeros((B, cfg.d_model), x.dtype)
+        state0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+
+        def body(x, blk):
+            x, _, _, _ = _rwkv_block_apply(cfg, blk, x, zeros_prev, zeros_prev,
+                                           state0, ctx)
+            return x, None
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.head_dim
+        conv_ch = d_inner + 2 * s.state_dim
+        conv0 = jnp.zeros((B, s.conv_width - 1, conv_ch), x.dtype)
+        ssd0 = jnp.zeros((B, H, s.head_dim, s.state_dim), jnp.float32)
+
+        def body(x, blk):
+            x, _, _ = _mamba_block_apply(cfg, blk, x, conv0, ssd0, ctx)
+            return x, None
+
+        def group_fn(x, blocks_slice):
+            # one shared-attn invocation + its mamba layers, rematerialised as a
+            # unit (the shared block is outside any scan, so it needs its own
+            # checkpoint to avoid storing attention/MLP intermediates per group)
+            x = _shared_block_apply(cfg, params, x, positions, ctx)
+            x, _ = jax.lax.scan(body, x, blocks_slice)
+            return x
+        group_fn = _remat(group_fn, cfg)
+        for lo, hi in _hybrid_groups(cfg):
+            x = group_fn(x, _slice_tree(params["blocks"], lo, hi))
+
+    elif cfg.family == "vlm":
+        assert media is not None, "vlm needs media embeddings"
+        period = cfg.cross_attn.period
+        n_cross = cfg.n_layers // period
+        n_self_per = period - 1
+        self_grouped = jax.tree.map(
+            lambda p: p.reshape((n_cross, n_self_per) + p.shape[1:]),
+            params["self_blocks"])
+
+        def self_body(x, blk):
+            return _dense_block_apply(cfg, blk, x, positions, ctx), None
+
+        def period_body(x, xs):
+            # remat the WHOLE period (4 self layers + 1 cross layer): the cross
+            # block lives outside the inner scan and must not store its
+            # intermediates once per period
+            self_p, cross_p = xs
+            x, _ = jax.lax.scan(self_body, x, self_p)
+            x = _cross_block_apply(cfg, cross_p, x, media, ctx)
+            return x, None
+        x, _ = jax.lax.scan(_remat(period_body, cfg), x,
+                            (self_grouped, params["cross_blocks"]))
+
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm_apply(params["final_norm"], x)
+    if return_hidden:
+        return x, aux_total
+    logits = L.lm_head_apply(params["embed"], x, ctx)
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# KV/state cache — abstract structure + prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_struct(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """ShapeDtypeStructs for the decode cache (used by input_specs + init)."""
+    dt = cfg.dtype
+    hd = cfg.resolved_head_dim
+    sds = jax.ShapeDtypeStruct
+    if cfg.family in ("dense", "moe"):
+        nl = cfg.n_layers
+        kv = (nl, batch, max_len, cfg.n_kv_heads, hd)
+        return {"k": sds(kv, dt), "v": sds(kv, dt)}
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        nl = cfg.n_layers
+        return {
+            "wkv": sds((nl, batch, cfg.d_model // s.head_dim, s.head_dim, s.head_dim), jnp.float32),
+            "tm_prev": sds((nl, batch, cfg.d_model), dt),
+            "cm_prev": sds((nl, batch, cfg.d_model), dt),
+        }
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.head_dim
+        conv_ch = d_inner + 2 * s.state_dim
+        ninv = n_shared_invocations(cfg)
+        W = min(max_len, cfg.sliding_window or max_len)
+        hh = cfg.hybrid.shared_attn_heads
+        hhd = cfg.d_model // hh
+        return {
+            "conv": sds((cfg.n_layers, batch, s.conv_width - 1, conv_ch), dt),
+            "ssd": sds((cfg.n_layers, batch, H, s.head_dim, s.state_dim), jnp.float32),
+            "shared_k": sds((ninv, batch, W, hh, hhd), dt),
+            "shared_v": sds((ninv, batch, W, hh, hhd), dt),
+        }
+    if cfg.family == "vlm":
+        period = cfg.cross_attn.period
+        n_cross = cfg.n_layers // period
+        n_self = cfg.n_layers - n_cross
+        kv = (n_self, batch, max_len, cfg.n_kv_heads, hd)
+        xkv = (n_cross, batch, cfg.cross_attn.n_media_tokens, cfg.n_kv_heads, hd)
+        return {"k": sds(kv, dt), "v": sds(kv, dt),
+                "xk": sds(xkv, dt), "xv": sds(xkv, dt)}
+    raise ValueError(cfg.family)
+
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    """Logical axes matching cache_struct (for sharding)."""
+    if cfg.family in ("dense", "moe"):
+        kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        return {"k": kv, "v": kv}
+    if cfg.family == "ssm":
+        return {"wkv": ("layers", "batch", "heads", "head_dim", "head_dim"),
+                "tm_prev": ("layers", "batch", "embed"),
+                "cm_prev": ("layers", "batch", "embed")}
+    if cfg.family == "hybrid":
+        kv = ("layers", "batch", "kv_seq", "heads", "head_dim")
+        return {"conv": ("layers", "batch", "conv", "heads_x_dim"),
+                "ssd": ("layers", "batch", "heads", "head_dim", "state"),
+                "shared_k": kv, "shared_v": kv}
+    if cfg.family == "vlm":
+        kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        xkv = ("layers", "batch", "frames", "kv_heads", "head_dim")
+        return {"k": kv, "v": kv, "xk": xkv, "xv": xkv}
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, batch, max_len))
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, media=None,
+            ctx: ShardCtx = NO_SHARD, max_len: int | None = None):
+    """Process a prompt, return (logits_last (B,V), cache filled to S)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    positions = _positions(B, S)
+    x = L.embed_apply(params["embed"], tokens, ctx)
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, blk):
+            h, kv = L.attn_prefill(blk["attn"], L.norm_apply(blk["ln1"], x),
+                                   positions=positions, theta=cfg.rope_theta,
+                                   window=cfg.sliding_window, ctx=ctx,
+                                   cache_len=max_len)
+            x = x + h
+            if "moe" in blk:
+                y, _ = L.moe_apply(blk["moe"], L.norm_apply(blk["ln2"], x), cfg, ctx)
+            else:
+                y = L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+            return x + y, kv
+
+        stacks = []
+        if "dense0" in params:
+            x, kv0 = jax.lax.scan(_remat(body, cfg), x, params["dense0"])
+            stacks.append(kv0)
+        x, kvs = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+        stacks.append(kvs)
+        k = jnp.concatenate([s[0] for s in stacks]) if len(stacks) > 1 else stacks[0][0]
+        v = jnp.concatenate([s[1] for s in stacks]) if len(stacks) > 1 else stacks[0][1]
+        cache = {"k": k, "v": v}
+
+    elif cfg.family == "ssm":
+        x = L.norm_apply(params["ln0"], x)
+        s = cfg.ssm
+        H, Dh = L.rwkv_heads(cfg), s.head_dim
+        zeros_prev = jnp.zeros((B, cfg.d_model), x.dtype)
+        state0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+
+        def body(x, blk):
+            x, tm_last, cm_last, st = _rwkv_block_apply(
+                cfg, blk, x, zeros_prev, zeros_prev, state0, ctx)
+            return x, (st, tm_last, cm_last)
+        x, (wkv, tm_prev, cm_prev) = jax.lax.scan(_remat(body, cfg), x,
+                                                  params["blocks"])
+        cache = {"wkv": wkv, "tm_prev": tm_prev, "cm_prev": cm_prev}
+
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.head_dim
+        conv_ch = d_inner + 2 * s.state_dim
+        conv0 = jnp.zeros((B, s.conv_width - 1, conv_ch), x.dtype)
+        ssd0 = jnp.zeros((B, H, s.head_dim, s.state_dim), jnp.float32)
+        W = min(max_len, cfg.sliding_window or max_len)
+        hh = cfg.hybrid.shared_attn_heads
+
+        def body(x, blk):
+            x, conv_s, ssd_s = _mamba_block_apply(cfg, blk, x, conv0, ssd0, ctx)
+            return x, (conv_s, ssd_s)
+        body = _remat(body, cfg)
+        sk, sv, convs, ssds = [], [], [], []
+        for lo, hi in _hybrid_groups(cfg):
+            h, kv = L.attn_prefill(
+                params["shared"]["attn"],
+                L.norm_apply(params["shared"]["ln1"], x), positions=positions,
+                theta=cfg.rope_theta, window=cfg.sliding_window, ctx=ctx,
+                cache_len=max_len)
+            x = x + h
+            x = x + L.mlp_apply(params["shared"]["mlp"],
+                                L.norm_apply(params["shared"]["ln2"], x), ctx)
+            # keep only the trailing window of the cache (wrap-indexed at decode)
+            k_w = kv[0][:, -W:] if S >= W else jnp.pad(kv[0][:, :S],
+                                                       [(0, 0), (0, W - S), (0, 0), (0, 0)])
+            v_w = kv[1][:, -W:] if S >= W else jnp.pad(kv[1][:, :S],
+                                                       [(0, 0), (0, W - S), (0, 0), (0, 0)])
+            sk.append(k_w)
+            sv.append(v_w)
+            x, (conv_s, ssd_s) = jax.lax.scan(body, x,
+                                              _slice_tree(params["blocks"], lo, hi))
+            convs.append(conv_s)
+            ssds.append(ssd_s)
+        cache = {"conv": jnp.concatenate(convs), "ssd": jnp.concatenate(ssds),
+                 "shared_k": jnp.stack(sk), "shared_v": jnp.stack(sv)}
+
+    elif cfg.family == "vlm":
+        assert media is not None
+        period = cfg.cross_attn.period
+        n_cross = cfg.n_layers // period
+        n_self_per = period - 1
+        self_grouped = jax.tree.map(
+            lambda p: p.reshape((n_cross, n_self_per) + p.shape[1:]),
+            params["self_blocks"])
+
+        def self_body(x, blk):
+            h, kv = L.attn_prefill(blk["attn"], L.norm_apply(blk["ln1"], x),
+                                   positions=positions, theta=cfg.rope_theta,
+                                   ctx=ctx, cache_len=max_len)
+            x = x + h
+            x = x + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+            return x, kv
+
+        def period_body(x, xs):
+            self_p, cross_p = xs
+            x, kvs = jax.lax.scan(_remat(self_body, cfg), x, self_p)
+            xm = L.norm_apply(cross_p["ln1"], x)
+            xk = jnp.einsum("bmd,dhk->bmhk", media, cross_p["attn"]["wk"])
+            xv = jnp.einsum("bmd,dhk->bmhk", media, cross_p["attn"]["wv"])
+            x = _cross_block_apply(cfg, cross_p, x, media, ctx)
+            return x, (kvs, (xk, xv))
+        x, (kvs, xkvs) = jax.lax.scan(period_body, x,
+                                      (self_grouped, params["cross_blocks"]))
+        k = kvs[0].reshape((-1,) + kvs[0].shape[2:])
+        v = kvs[1].reshape((-1,) + kvs[1].shape[2:])
+        cache = {"k": k, "v": v, "xk": xkvs[0], "xv": xkvs[1]}
+
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm_apply(params["final_norm"], x)
+    logits = L.lm_head_apply(params["embed"], x[:, -1:], ctx)
+    return logits[:, 0], cache
+
+
+def decode(params, cfg: ArchConfig, cache: dict, tokens, pos, *,
+           ctx: ShardCtx = NO_SHARD):
+    """One decode step.  tokens (B, 1) int32; pos (B,) tokens already in cache.
+    Returns (logits (B, V) fp32, new cache)."""
+    B = tokens.shape[0]
+    x = L.embed_apply(params["embed"], tokens, ctx)
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, xs):
+            blk, ck, cv = xs
+            h, (nk, nv) = L.attn_decode(blk["attn"], L.norm_apply(blk["ln1"], x),
+                                        ck, cv, pos, theta=cfg.rope_theta,
+                                        window=cfg.sliding_window, ctx=ctx)
+            x = x + h
+            if "moe" in blk:
+                y, _ = L.moe_apply(blk["moe"], L.norm_apply(blk["ln2"], x), cfg, ctx,
+                                   dropless=True)
+            else:
+                y = L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+            return x + y, (nk, nv)
+
+        if "dense0" in params:
+            nd = params["dense0"]["ln1"]["scale"].shape[0]
+            x, kv0 = jax.lax.scan(body, x, (params["dense0"],
+                                            cache["k"][:nd], cache["v"][:nd]))
+            x, kvs = jax.lax.scan(body, x, (params["blocks"],
+                                            cache["k"][nd:], cache["v"][nd:]))
+            cache = {"k": jnp.concatenate([kv0[0], kvs[0]]),
+                     "v": jnp.concatenate([kv0[1], kvs[1]])}
+        else:
+            x, kvs = jax.lax.scan(body, x, (params["blocks"],
+                                            cache["k"], cache["v"]))
+            cache = {"k": kvs[0], "v": kvs[1]}
+
+    elif cfg.family == "ssm":
+        x = L.norm_apply(params["ln0"], x)
+        s = cfg.ssm
+        H, Dh = L.rwkv_heads(cfg), s.head_dim
+
+        from repro.kernels import ref as kref
+
+        def body(x, xs):
+            blk, wkv, tm_prev, cm_prev = xs
+            xin = L.norm_apply(blk["ln1"], x)
+            r, k, v, w, g = L._rwkv6_projections(blk, xin, tm_prev[:, None], cfg)
+            y, wkv_new = kref.rwkv6_step_ref(
+                r[:, 0], k[:, 0], v[:, 0], w[:, 0].astype(r.dtype),
+                blk["tm"]["bonus"], wkv)
+            y = y.reshape(B, 1, cfg.d_model)
+            y = L.group_norm_apply(blk["tm"]["ln_x"], y, L.rwkv_heads(cfg))
+            y = jnp.einsum("bse,ed->bsd", y * g, blk["tm"]["wo"])
+            x = x + y
+            xin2 = L.norm_apply(blk["ln2"], x)
+            h, cm_last = L.rwkv6_channel_mix(blk, xin2, cm_prev)
+            x = x + h
+            return x, (wkv_new, xin[:, -1], cm_last)
+
+        x, (wkv, tm_prev, cm_prev) = jax.lax.scan(
+            body, x, (params["blocks"], cache["wkv"],
+                      cache["tm_prev"], cache["cm_prev"]))
+        cache = {"wkv": wkv, "tm_prev": tm_prev, "cm_prev": cm_prev}
+
+    elif cfg.family == "hybrid":
+        from repro.kernels import ref as kref
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.head_dim
+        N = s.state_dim
+        W = cache["shared_k"].shape[2]
+
+        def body(x, xs):
+            blk, conv_st, ssd_st = xs
+            xin = L.norm_apply(blk["ln"], x)
+            z, xbc, dt, _, _, _ = L._mamba2_split(blk["mamba"], xin, cfg)
+            seq = jnp.concatenate([conv_st.astype(xbc.dtype), xbc], axis=1)
+            kernel = blk["mamba"]["conv_w"]
+            conv = sum(seq[:, i] * kernel[i][None] for i in range(s.conv_width))
+            conv = jax.nn.silu((conv + blk["mamba"]["conv_b"][None])
+                               .astype(jnp.float32)).astype(x.dtype)
+            x_ssm, Bv, Cv = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+            xh = x_ssm.reshape(B, H, s.head_dim)
+            dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                                  + blk["mamba"]["dt_bias"].astype(jnp.float32))
+            A = -jnp.exp(blk["mamba"]["a_log"].astype(jnp.float32))
+            y, ssd_new = kref.mamba2_step_ref(xh, dtf, A, Bv, Cv, ssd_st)
+            y = y + xh * blk["mamba"]["d_skip"].astype(x.dtype)[None, :, None]
+            y = y.reshape(B, 1, d_inner)
+            y = L.group_norm_apply(blk["mamba"]["norm"], y, H)
+            y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+            out = jnp.einsum("bse,ed->bsd", y, blk["mamba"]["out_proj"])
+            return x + out, (seq[:, 1:], ssd_new)
+
+        groups = _hybrid_groups(cfg)
+        convs, ssds, sks, svs = [], [], [], []
+        for gi, (lo, hi) in enumerate(groups):
+            # shared attention with a wrap-indexed sliding-window cache
+            blk = params["shared"]
+            xin = L.norm_apply(blk["ln1"], x)
+            q = jnp.einsum("bsd,dhk->bshk", xin, blk["attn"]["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", xin, blk["attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", xin, blk["attn"]["wv"])
+            q = L.rope_apply(q, pos[:, None], cfg.rope_theta)
+            k = L.rope_apply(k, pos[:, None], cfg.rope_theta)
+            slot = pos % W
+            bidx = jnp.arange(B)
+            ck = cache["shared_k"][gi].at[bidx, slot].set(k[:, 0])
+            cv = cache["shared_v"][gi].at[bidx, slot].set(v[:, 0])
+            from repro.kernels import ops as kops
+            kv_len = jnp.minimum(pos + 1, W)
+            out = kops.decode_attention(q, ck, cv, kv_len, impl=ctx.impl)
+            y = jnp.einsum("bshk,hkd->bsd", out, blk["attn"]["wo"])
+            x = x + y
+            x = x + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+            sks.append(ck)
+            svs.append(cv)
+            x, (conv_s, ssd_s) = jax.lax.scan(
+                body, x, (_slice_tree(params["blocks"], lo, hi),
+                          cache["conv"][lo:hi], cache["ssd"][lo:hi]))
+            convs.append(conv_s)
+            ssds.append(ssd_s)
+        cache = {"conv": jnp.concatenate(convs), "ssd": jnp.concatenate(ssds),
+                 "shared_k": jnp.stack(sks), "shared_v": jnp.stack(svs)}
+
+    elif cfg.family == "vlm":
+        period = cfg.cross_attn.period
+        n_cross = cfg.n_layers // period
+        n_self_per = period - 1
+        self_grouped = jax.tree.map(
+            lambda p: p.reshape((n_cross, n_self_per) + p.shape[1:]),
+            params["self_blocks"])
+        kc = cache["k"].reshape((n_cross, n_self_per) + cache["k"].shape[1:])
+        vc = cache["v"].reshape((n_cross, n_self_per) + cache["v"].shape[1:])
+
+        def self_body(x, xs):
+            blk, ck, cv = xs
+            h, (nk, nv) = L.attn_decode(blk["attn"], L.norm_apply(blk["ln1"], x),
+                                        ck, cv, pos, theta=cfg.rope_theta, ctx=ctx)
+            x = x + h
+            x = x + L.mlp_apply(blk["mlp"], L.norm_apply(blk["ln2"], x), ctx)
+            return x, (nk, nv)
+
+        def period_fn(x, self_p, cross_p, ck, cv, xk, xv):
+            x, kvs = jax.lax.scan(self_body, x, (self_p, ck, cv))
+            xin = L.norm_apply(cross_p["ln1"], x)
+            h, _ = L.attn_decode(cross_p["attn"], xin, None, None, pos,
+                                 theta=cfg.rope_theta, ctx=ctx,
+                                 cross_kv=(xk, xv))
+            x = x + jnp.tanh(cross_p["gate_attn"].astype(jnp.float32)
+                             ).astype(x.dtype) * h
+            h = L.mlp_apply(cross_p["mlp"], L.norm_apply(cross_p["ln2"], x), ctx)
+            x = x + jnp.tanh(cross_p["gate_mlp"].astype(jnp.float32)
+                             ).astype(x.dtype) * h
+            return x, kvs
+
+        # python-unrolled over periods: under a scan, GSPMD reshards the WHOLE
+        # stacked FSDP weights before the loop (a full-model regather in HBM);
+        # unrolled, each period's weights are gathered transiently (DESIGN.md §5)
+        ks_out, vs_out = [], []
+        for g in range(n_cross):
+            sp = jax.tree.map(lambda t: t[g], self_grouped)
+            cp = jax.tree.map(lambda t: t[g], params["cross_blocks"])
+            x, kvs = period_fn(x, sp, cp, kc[g], vc[g],
+                               cache["xk"][g], cache["xv"][g])
+            ks_out.append(kvs[0])
+            vs_out.append(kvs[1])
+        k_new = jnp.stack(ks_out).reshape((-1,) + ks_out[0].shape[1:])
+        v_new = jnp.stack(vs_out).reshape((-1,) + vs_out[0].shape[1:])
+        cache = {"k": k_new, "v": v_new,
+                 "xk": cache["xk"], "xv": cache["xv"]}
+
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm_apply(params["final_norm"], x)
+    logits = L.lm_head_apply(params["embed"], x, ctx)
+    return logits[:, 0], cache

@@ -1,0 +1,102 @@
+"""Model registry: family -> implementation module, plus input/media specs and
+analytic parameter counts used by the roofline (6*N*D model FLOPs)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.parallel.axes import abstract_params, init_params, params_axes
+
+
+def _module(cfg: ArchConfig):
+    return encdec if cfg.family == "audio" else lm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Thin functional facade over a family implementation."""
+    cfg: ArchConfig
+
+    # --- parameters
+    def param_defs(self):
+        return _module(self.cfg).param_defs(self.cfg)
+
+    def abstract_params(self):
+        return abstract_params(self.param_defs(), self.cfg.dtype)
+
+    def params_axes(self):
+        return params_axes(self.param_defs())
+
+    def init(self, key):
+        return init_params(self.param_defs(), key, self.cfg.dtype)
+
+    # --- forward fns
+    def apply(self, params, tokens, *, media=None, ctx=None, **kw):
+        from repro.models.layers import NO_SHARD
+        return _module(self.cfg).apply(params, self.cfg, tokens, media=media,
+                                       ctx=ctx or NO_SHARD, **kw)
+
+    def prefill(self, params, tokens, *, media=None, ctx=None, **kw):
+        from repro.models.layers import NO_SHARD
+        return _module(self.cfg).prefill(params, self.cfg, tokens, media=media,
+                                         ctx=ctx or NO_SHARD, **kw)
+
+    def decode(self, params, cache, tokens, pos, *, ctx=None):
+        from repro.models.layers import NO_SHARD
+        return _module(self.cfg).decode(params, self.cfg, cache, tokens, pos,
+                                        ctx=ctx or NO_SHARD)
+
+    # --- caches
+    def cache_struct(self, batch: int, max_len: int):
+        return _module(self.cfg).cache_struct(self.cfg, batch, max_len)
+
+    def cache_axes(self):
+        return _module(self.cfg).cache_axes(self.cfg)
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_struct(batch, max_len))
+
+    # --- media stubs (frontends)
+    def needs_media(self) -> bool:
+        return self.cfg.family in ("audio", "vlm")
+
+    def media_struct(self, batch: int):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return jax.ShapeDtypeStruct(
+                (batch, cfg.enc_dec.n_frames, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            return jax.ShapeDtypeStruct(
+                (batch, cfg.cross_attn.n_media_tokens, cfg.d_model), cfg.dtype)
+        return None
+
+
+def get_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+def param_count(cfg: ArchConfig) -> int:
+    ap = Model(cfg).abstract_params()
+    return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(ap))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Activated parameters per token (MoE: top_k + shared experts only) — the N in
+    6*N*D for MoE archs."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    per_expert = 3 * cfg.d_model * m.expert_ff
+    n_moe_layers = cfg.n_layers - m.first_dense
+    routed_total = n_moe_layers * m.n_experts * per_expert
+    routed_active = n_moe_layers * m.top_k * per_expert
+    return total - routed_total + routed_active

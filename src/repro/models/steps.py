@@ -1,0 +1,155 @@
+"""Step factories: train_step / prefill_step / decode_step closures for an arch.
+
+These are the schedulable units of work in the ATLAS runtime and the functions the
+multi-pod dry-run lowers."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import NO_SHARD, ShardCtx, xent_loss
+from repro.models.registry import get_model
+from repro.optim import adamw
+
+
+def chunked_xent(hidden, embed_params, targets, ctx: ShardCtx = NO_SHARD,
+                 chunk: int = 1024):
+    """Next-token CE computed in sequence chunks so the (B, S, V) fp32 logits never
+    materialise (each chunk is rematerialised in the backward pass).  hidden:
+    (B, S, D) final-norm states aligned with `targets` (B, S)."""
+    from repro.models.layers import lm_head_apply
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    Sp = S + pad
+    n = Sp // chunk
+    hs = jnp.moveaxis(hidden.reshape(B, n, chunk, D), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def one(h, t):
+        logits = lm_head_apply(embed_params, h, ctx)          # (B, c, V) fp32
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(t, 0)[..., None],
+                                   axis=-1)[..., 0]
+        mask = (t >= 0).astype(jnp.float32)
+        return ((lse - gold) * mask).sum(), mask.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        s, c = one(*xs)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ts))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig | None = None,
+                    ctx: ShardCtx = NO_SHARD, donate: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {params, opt, step}; batch = {tokens (B,S) [, media (B,M,D)]}.
+    Loss: next-token CE over tokens[1:] (sequence-chunked), plus MoE aux loss.
+    cfg.accum_steps > 1 splits the global batch into microbatches with gradient
+    accumulation (lax.scan) — the activation-memory knob for the big archs."""
+    model = get_model(cfg)
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        moment_dtype="bf16" if cfg.opt_dtype == "bf16" else "fp32")
+
+    def loss_fn(params, batch):
+        hidden, aux = model.apply(params, batch["tokens"],
+                                  media=batch.get("media"), ctx=ctx,
+                                  return_hidden=True)
+        loss = chunked_xent(hidden[:, :-1], params["embed"],
+                            batch["tokens"][:, 1:], ctx)
+        return loss + aux, (loss, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    # grad accumulator dtype: fp32 default; bf16 halves the buffer for 100B+ archs
+    # (summing <=32 microbatch grads in bf16; drift bounded in tests/test_accum.py)
+    acc_dtype = jnp.bfloat16 if cfg.opt_dtype == "bf16" else jnp.float32
+
+    def train_step(state, batch):
+        B = jax.tree.leaves(batch)[0].shape[0]
+        # microbatches must stay shardable across the data axes
+        A = max(1, min(cfg.accum_steps, B // max(ctx.n_groups, 1) or 1))
+        while B % A:
+            A -= 1
+        if A == 1:
+            (total, (loss, aux)), grads = grad_fn(state["params"], batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (tot, (l, a)), g = grad_fn(state["params"], mb)
+                g_acc = jax.tree.map(
+                    lambda ga, gi: (ga.astype(jnp.float32)
+                                    + gi.astype(jnp.float32)).astype(acc_dtype),
+                    g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                              state["params"])
+            (grads, loss, aux), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / A, grads)
+            loss, aux = loss / A, aux / A
+            total = loss + aux
+        params, opt, om = adamw.apply_updates(state["params"], grads,
+                                              state["opt"], opt_cfg)
+        metrics = {"loss": loss, "aux_loss": aux, "total_loss": total, **om}
+        return {"params": params, "opt": opt, "step": state["step"] + 1}, metrics
+
+    return train_step, opt_cfg
+
+
+def make_prefill_step(cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch["tokens"],
+                                      media=batch.get("media"), ctx=ctx)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+    """decode_step(params, cache, tokens (B,1), pos (B,)) -> (next_token, logits, cache)."""
+    model = get_model(cfg)
+
+    def decode_step(params, cache, tokens, pos):
+        logits, cache = model.decode(params, cache, tokens, pos, ctx=ctx)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+
+    return decode_step
+
+
+def init_train_state(cfg: ArchConfig, key, opt_cfg: adamw.AdamWConfig):
+    model = get_model(cfg)
+    params = model.init(key)
+    return {"params": params, "opt": adamw.init_opt_state(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig):
+    model = get_model(cfg)
+    ap = model.abstract_params()
+    return {"params": ap, "opt": adamw.abstract_opt_state(ap, opt_cfg),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_axes(cfg: ArchConfig):
+    model = get_model(cfg)
+    pa = model.params_axes()
+    return {"params": pa, "opt": adamw.opt_state_axes(pa), "step": ()}

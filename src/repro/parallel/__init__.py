@@ -1,0 +1,9 @@
+from repro.parallel.axes import (
+    DEFAULT_RULES, ParamDef, abstract_params, init_params, is_param_def,
+    logical_to_spec, make_rules, params_axes, tree_sharding, tree_spec,
+)
+
+__all__ = [
+    "DEFAULT_RULES", "ParamDef", "abstract_params", "init_params", "is_param_def",
+    "logical_to_spec", "make_rules", "params_axes", "tree_sharding", "tree_spec",
+]

@@ -1,0 +1,205 @@
+"""Logical-axis sharding: parameters/activations are annotated with *logical* axis
+names; a per-arch rule table maps logical names onto physical mesh axes.
+
+This is the MaxText-style indirection that lets one model definition run on any mesh
+(single pod ``(data, model)`` or multi-pod ``(pod, data, model)``) and lets the perf
+loop re-shard by editing rules rather than model code.
+
+Logical axes used in the zoo:
+  layers     stacked-scan layer dimension (never sharded; no PP axis in the mesh)
+  batch      global batch                -> ("pod", "data")
+  seq        activation sequence dim     -> None (or "data" for SP long-context)
+  kv_seq     KV-cache sequence dim       -> None, or "data" for long_500k decode
+  embed      d_model                     -> None, or "data" for FSDP weight shard
+  ff         MLP hidden                  -> "model"
+  heads      attention query heads       -> "model"
+  kv_heads   attention KV heads          -> "model" iff divisible, else None
+  head_dim   per-head dim                -> None
+  vocab      vocabulary                  -> "model"
+  experts    MoE expert dim              -> "model"   (expert parallelism)
+  expert_ff  per-expert hidden           -> None (EP already covers "model")
+  state      SSM/RWKV recurrent state    -> None
+  conv       conv kernel width           -> None
+  frames     audio/vision token dim      -> None
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# Default rules for a (data, model) or (pod, data, model) mesh.  Values may be a
+# mesh-axis name, a tuple of mesh-axis names, or None (replicated).
+DEFAULT_RULES: dict[str, Any] = {
+    "layers": None,
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "ff": "model",
+    "heads": "model",
+    "heads_x_dim": "model",  # fused (heads*head_dim) projections (rwkv/mamba d_inner)
+    "kv_heads": "model",
+    "head_dim": None,
+    "vocab": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "state": None,
+    "conv": None,
+    "frames": None,
+}
+
+
+def make_rules(
+    *,
+    fsdp: bool = False,
+    shard_kv_heads: bool = True,
+    sequence_parallel: bool = False,
+    overrides: Mapping[str, Any] | None = None,
+) -> dict[str, Any]:
+    """Build a rule table.
+
+    fsdp: additionally shard the ``embed`` dim of weights over the data axes
+      (ZeRO-3 / FSDP style; XLA inserts per-layer all-gathers that overlap with
+      the scanned layer compute).
+    shard_kv_heads: disable for archs whose kv_heads don't divide the model axis
+      (GSPMD would pad; replicating KV is cheaper for GQA).
+    sequence_parallel: shard kv_seq over the data axes (long-context decode where
+      batch==1 cannot use the data axis).
+    """
+    rules = dict(DEFAULT_RULES)
+    if fsdp:
+        rules["embed"] = ("pod", "data")
+    if not shard_kv_heads:
+        rules["kv_heads"] = None
+    if sequence_parallel:
+        rules["kv_seq"] = ("pod", "data", "model")
+        rules["batch"] = None
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _mesh_axes(mesh: Mesh) -> set[str]:
+    return set(mesh.axis_names)
+
+
+def _resolve_entry(entry: Any, present: set[str]) -> Any:
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on single-pod)."""
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in present else None
+    kept = tuple(a for a in entry if a in present)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def logical_to_spec(axes: Sequence[str | None], rules: Mapping[str, Any], mesh: Mesh) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec for `mesh`."""
+    present = _mesh_axes(mesh)
+    used: set[str] = set()
+    parts = []
+    for name in axes:
+        if name is None:
+            parts.append(None)
+            continue
+        entry = _resolve_entry(rules.get(name), present)
+        # A mesh axis may appear at most once in a PartitionSpec.
+        if entry is None:
+            parts.append(None)
+        elif isinstance(entry, str):
+            if entry in used:
+                parts.append(None)
+            else:
+                used.add(entry)
+                parts.append(entry)
+        else:
+            fresh = tuple(a for a in entry if a not in used)
+            used.update(fresh)
+            parts.append(fresh if fresh else None)
+    return P(*parts)
+
+
+def tree_spec(axes_tree: Any, rules: Mapping[str, Any], mesh: Mesh) -> Any:
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: logical_to_spec(axes, rules, mesh),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def tree_sharding(axes_tree: Any, rules: Mapping[str, Any], mesh: Mesh) -> Any:
+    """Same as tree_spec but returns NamedShardings bound to `mesh`."""
+    specs = tree_spec(axes_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+Initializer = Any  # Callable[[jax.Array key, tuple shape, dtype], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Single source of truth for one parameter tensor: shape, dtype, logical axes
+    and initializer.  Models build a pytree of these; everything else (abstract
+    eval, sharding, init) derives from it."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = None  # filled by the model's default dtype when None
+    init: str = "normal"  # normal | zeros | ones | scaled (fan-in scaled normal)
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def abstract_params(defs: Any, default_dtype) -> Any:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or default_dtype),
+        defs, is_leaf=is_param_def)
+
+
+def params_axes(defs: Any) -> Any:
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_param_def)
+
+
+def init_params(defs: Any, key: jax.Array, default_dtype) -> Any:
+    """Materialize parameters.  Each leaf gets a distinct fold of `key`."""
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_param_def)
+    out = []
+    for i, d in enumerate(leaves):
+        dtype = d.dtype or default_dtype
+        k = jax.random.fold_in(key, i)
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, dtype)
+        elif d.init == "scaled":
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+            std = d.scale / (fan_in ** 0.5)
+            arr = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+        else:  # normal
+            arr = (jax.random.normal(k, d.shape, jnp.float32) * 0.02 * d.scale).astype(dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)

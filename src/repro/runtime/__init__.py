@@ -1,0 +1,3 @@
+from repro.runtime.trainer import ElasticTrainer, HostState, RuntimeConfig
+
+__all__ = ["ElasticTrainer", "HostState", "RuntimeConfig"]

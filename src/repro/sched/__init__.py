@@ -1,0 +1,6 @@
+from repro.sched.base import (
+    BASELINES, CapacityScheduler, FIFOScheduler, FairScheduler, Scheduler,
+)
+
+__all__ = ["BASELINES", "CapacityScheduler", "FIFOScheduler", "FairScheduler",
+           "Scheduler"]

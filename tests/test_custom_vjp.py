@@ -1,0 +1,87 @@
+"""The linear-recurrence custom VJPs (RWKV6 WKV, Mamba2 SSD) must match plain
+scan autodiff exactly — these back the memory fix documented in EXPERIMENTS §Perf
+(scan-AD stores the state per timestep; the chunked adjoint stores boundaries)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+
+
+def _rwkv_inputs(B, S, H, Dh, seed=0):
+    key = jax.random.PRNGKey(seed)
+    mk = lambda i: jax.random.normal(jax.random.fold_in(key, i), (B, S, H, Dh))
+    r, k, v = mk(0), mk(1), mk(2)
+    w = jax.nn.sigmoid(mk(3))
+    u = jax.random.normal(jax.random.fold_in(key, 4), (H, Dh)) * 0.2
+    s0 = jax.random.normal(jax.random.fold_in(key, 5), (B, H, Dh, Dh))
+    return r, k, v, w, u, s0
+
+
+@pytest.mark.parametrize("B,S,H,Dh", [(2, 64, 3, 8), (1, 96, 2, 16)])
+def test_rwkv6_custom_vjp_matches_autodiff(B, S, H, Dh):
+    args = _rwkv_inputs(B, S, H, Dh)
+
+    def loss(fn, *a):
+        y, sf = fn(*a)
+        return jnp.sin(y).sum() + (sf ** 2).sum() * 0.1
+
+    g1 = jax.grad(lambda *a: loss(ref.rwkv6_scan_ref, *a),
+                  argnums=tuple(range(6)))(*args)
+    g2 = jax.grad(lambda *a: loss(ref._rwkv6_fwd_scan, *a),
+                  argnums=tuple(range(6)))(*args)
+    for name, a, b in zip("r k v w u s0".split(), g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("B,S,H,P,N", [(2, 64, 3, 8, 5), (1, 96, 2, 16, 8)])
+def test_mamba2_custom_vjp_matches_autodiff(B, S, H, P, N):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(jax.random.fold_in(key, 0), (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.fold_in(key, 3), (B, S, N))
+    Cm = jax.random.normal(jax.random.fold_in(key, 4), (B, S, N))
+    s0 = jax.random.normal(jax.random.fold_in(key, 5), (B, H, P, N))
+
+    def loss(fn, *a):
+        y, sf = fn(*a)
+        return jnp.sin(y).sum() + (sf ** 2).sum() * 0.1
+
+    g1 = jax.grad(lambda *a: loss(ref.mamba2_ssd_ref, *a),
+                  argnums=tuple(range(6)))(x, dt, A, Bm, Cm, s0)
+    g2 = jax.grad(lambda *a: loss(ref._ssd_fwd_scan, *a),
+                  argnums=tuple(range(6)))(x, dt, A, Bm, Cm, s0)
+    for name, a, b in zip("x dt A B C s0".split(), g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-5, err_msg=name)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 200), S=st.sampled_from([32, 48, 64]))
+def test_property_rwkv6_vjp_any_seed(seed, S):
+    args = _rwkv_inputs(1, S, 2, 8, seed=seed)
+
+    def loss(fn, *a):
+        y, sf = fn(*a)
+        return (y ** 2).sum() + sf.sum()
+
+    g1 = jax.grad(lambda *a: loss(ref.rwkv6_scan_ref, *a), argnums=(1, 3))(*args)
+    g2 = jax.grad(lambda *a: loss(ref._rwkv6_fwd_scan, *a), argnums=(1, 3))(*args)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+
+
+def test_forward_unchanged_by_vjp_wrapper():
+    args = _rwkv_inputs(2, 64, 3, 8)
+    y1, s1 = ref.rwkv6_scan_ref(*args)
+    y2, s2 = ref._rwkv6_fwd_scan(*args)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-6)

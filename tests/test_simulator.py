@@ -1,0 +1,156 @@
+"""Simulator + scheduler behaviour tests (unit + property-based)."""
+
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.chaos import ChaosConfig, ChaosInjector
+from repro.cluster.experiment import (ExperimentConfig, compare, run_atlas,
+                                      run_baseline)
+from repro.cluster.simulator import MACHINE_TYPES, Simulator
+from repro.cluster.telemetry import N_FEATURES, TelemetryTrace
+from repro.cluster.workload import WorkloadConfig, install, make_workload
+from repro.sched.base import BASELINES
+
+
+def _small_cfg(seed=0, intensity=3.0):
+    return ExperimentConfig(
+        workload=WorkloadConfig(n_single=12, n_chains=2, seed=seed,
+                                submit_horizon=3600.0),
+        chaos=ChaosConfig(intensity=intensity, seed=seed + 1),
+        seed=seed)
+
+
+@pytest.mark.parametrize("sched", ["fifo", "fair", "capacity"])
+def test_simulation_terminates_and_accounts_every_job(sched):
+    m, trace, sim = run_baseline(sched, _small_cfg())
+    assert m["jobs_total"] == m["jobs_finished"] + m["jobs_failed"] + \
+        sum(1 for j in sim.jobs.values() if j.status == "running")
+    assert m["jobs_total"] > 0
+    # no job left running at termination
+    assert all(j.status in ("finished", "failed") for j in sim.jobs.values())
+    # every task of every job reached a terminal state
+    for j in sim.jobs.values():
+        for t in j.tasks.values():
+            assert t.status in ("finished", "failed"), (j.jid, t.tid, t.status)
+
+
+def test_determinism_same_seed_same_metrics():
+    m1, _, _ = run_baseline("fifo", _small_cfg(seed=5))
+    m2, _, _ = run_baseline("fifo", _small_cfg(seed=5))
+    assert m1 == m2
+
+
+def test_different_seeds_differ():
+    m1, _, _ = run_baseline("fifo", _small_cfg(seed=5))
+    m2, _, _ = run_baseline("fifo", _small_cfg(seed=6))
+    assert m1 != m2
+
+
+def test_no_chaos_no_failures():
+    cfg = _small_cfg(intensity=0.0)
+    cfg.chaos.intensity = 0.0
+    cfg.hazard_noise = 0.0
+    # with zero chaos the only failure driver is the (small) ambient hazard; at
+    # logit -3 with no noise some attempts still fail, but *jobs* should rarely die
+    m, _, _ = run_baseline("fifo", cfg)
+    assert m["pct_jobs_failed"] <= 15.0
+
+
+def test_heartbeat_detection_delay():
+    """A killed TaskTracker is only detected at its next heartbeat; its running
+    attempts resolve then (the Dinu et al. effect ATLAS attacks)."""
+    sched = BASELINES["fifo"]()
+    sim = Simulator(sched, seed=0, heartbeat_interval=600.0)
+    install(sim, make_workload(WorkloadConfig(n_single=4, n_chains=0,
+                                              submit_horizon=1.0, seed=0)))
+    # run a few events to get attempts placed, then kill a busy node
+    for _ in range(50):
+        if not sim._heap:
+            break
+        import heapq
+        t, _, kind, payload = heapq.heappop(sim._heap)
+        sim.now = t
+        if kind == 0:
+            sim._on_submit(payload)
+        elif kind == 1:
+            sim._on_attempt_end(payload)
+        elif kind == 2:
+            sim._on_heartbeat(payload)
+        sim.scheduler.on_tick()
+        busy = [n for n in sim.nodes if n.running]
+        if busy:
+            break
+    busy = [n for n in sim.nodes if n.running]
+    if busy:
+        node = busy[0]
+        node.tt_alive = False
+        assert node.known_alive          # JT doesn't know yet
+        sim.detect_tt_failure(node)
+        assert not node.known_alive
+        assert not node.running          # stranded attempts were failed
+
+
+def test_telemetry_features_shape_and_observability():
+    m, trace, sim = run_baseline("fifo", _small_cfg())
+    (mx, my), (rx, ry) = trace.datasets()
+    assert mx.shape[1] == N_FEATURES
+    assert set(np.unique(my)) <= {0.0, 1.0}
+    assert len(mx) == len(my) and len(rx) == len(ry)
+    assert np.isfinite(mx).all()
+
+
+def test_atlas_stats_and_improvement_direction():
+    """On the calibrated default config ATLAS must not *increase* the failed-job
+    percentage (seeded)."""
+    cfg = _small_cfg(seed=2, intensity=4.0)
+    out = compare("fifo", cfg)
+    assert out["atlas"]["pct_jobs_failed"] <= out["base"]["pct_jobs_failed"] + 5.0
+    assert out["atlas"]["atlas"]["predictions"] > 0
+
+
+def test_capacity_memory_police_kills_overcommit():
+    from repro.sched.base import CapacityScheduler
+    sched = CapacityScheduler()
+    sim = Simulator(sched, seed=0)
+    install(sim, make_workload(WorkloadConfig(n_single=10, n_chains=0, seed=3,
+                                              submit_horizon=10.0)))
+    sim.run()
+    # the m3.large nodes (3.75 GB, 3 slots) can host at most 3 tasks => with the
+    # 1.2 GB/task model they occasionally overcommit and the police must fire;
+    # we only assert the sim stays consistent (no negative slot counts)
+    for n in sim.nodes:
+        assert n.running_maps >= 0 and n.running_reduces >= 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), intensity=st.floats(0.0, 8.0))
+def test_property_simulator_invariants(seed, intensity):
+    """Any seed/intensity: terminal states consistent, counters non-negative,
+    resource usage non-negative, time monotone."""
+    cfg = ExperimentConfig(
+        workload=WorkloadConfig(n_single=6, n_chains=1, seed=seed,
+                                submit_horizon=1800.0),
+        chaos=ChaosConfig(intensity=intensity, seed=seed + 1), seed=seed)
+    m, trace, sim = run_baseline("fifo", cfg)
+    assert m["tasks_finished"] + m["tasks_failed"] <= m["tasks_total"]
+    assert 0 <= m["pct_jobs_failed"] <= 100.0
+    assert m["sim_time"] >= 0
+    for j in sim.jobs.values():
+        for t in j.tasks.values():
+            assert t.failed_attempts <= t.max_attempts + 2  # spec copies tolerated
+            assert t.cpu_ms >= 0 and t.hdfs_read >= 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_atlas_runs_any_seed(seed):
+    cfg = ExperimentConfig(
+        workload=WorkloadConfig(n_single=5, n_chains=1, seed=seed,
+                                submit_horizon=1200.0),
+        chaos=ChaosConfig(intensity=4.0, seed=seed), seed=seed)
+    m, _, _ = run_atlas("fifo", cfg)
+    assert m["jobs_total"] > 0
+    assert all(v >= 0 for v in m["atlas"].values())
