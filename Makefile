@@ -1,0 +1,18 @@
+# Used verbatim by .github/workflows/ci.yml.
+PY ?= python
+
+.PHONY: test lint sweep-smoke
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+lint:
+	ruff check .
+
+# fast fleet smoke sweep: 2 schedulers x 2 seeds x 2 scenarios on the tiny
+# workload shape; emits experiments/SWEEP.json + SWEEP.md
+sweep-smoke:
+	PYTHONPATH=src $(PY) -m repro.cluster.fleet \
+		--schedulers fifo,atlas-fifo --seeds 2 \
+		--scenarios baseline,bursty_tt --workloads smoke \
+		--out experiments

@@ -4,7 +4,6 @@
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, save_json
 from repro.cluster.chaos import ChaosConfig

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import FULL, emit
+from benchmarks.common import emit
 from repro.kernels import ops, ref
 
 

@@ -4,7 +4,6 @@ prediction algorithms, per scheduler (FIFO/Fair/Capacity) and task type
 
 from __future__ import annotations
 
-import time
 
 import numpy as np
 
@@ -12,7 +11,6 @@ from benchmarks.common import FULL, Timer, emit, save_json
 from repro.cluster.experiment import ExperimentConfig, run_baseline
 from repro.cluster.workload import WorkloadConfig
 from repro.ml.cv import cross_validate
-from repro.ml.models import ALL_MODELS
 
 ALGOS = ["Tree", "Boost", "Glm", "CTree", "R.F.", "N.N."]
 

@@ -8,7 +8,6 @@ per-device-quantity / per-chip-rate (equivalent to the global/(chips*rate) form)
 from __future__ import annotations
 
 import json
-import pathlib
 
 from benchmarks.common import OUT, emit, save_json
 from repro.configs import SHAPES, get_arch

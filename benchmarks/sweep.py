@@ -1,0 +1,40 @@
+"""Fleet sweep benchmark: the paper's cross-scheduler, cross-failure-regime
+matrix (Figures 4-12 metrics per scenario) through the fleet engine.
+
+Fast mode (default) runs a CI-sized smoke matrix; REPRO_BENCH_FULL=1 runs all
+three baselines + their ATLAS variants over every scenario on the paper mix."""
+
+from __future__ import annotations
+
+from benchmarks.common import FULL, Timer, emit, save_json
+from repro.cluster.fleet import SweepSpec, run_sweep, sweep_markdown
+from repro.cluster.scenarios import SCENARIOS
+
+
+def run() -> dict:
+    if FULL:
+        spec = SweepSpec(
+            schedulers=("fifo", "fair", "capacity",
+                        "atlas-fifo", "atlas-fair", "atlas-capacity"),
+            seeds=3, scenarios=tuple(sorted(SCENARIOS)),
+            workloads=("default",))
+    else:
+        spec = SweepSpec(schedulers=("fifo", "atlas-fifo"), seeds=2,
+                         scenarios=("baseline", "bursty_tt"),
+                         workloads=("smoke",))
+    with Timer() as t:
+        result = run_sweep(spec)
+    n_cells = len(result["cells"])
+    emit("fleet/sweep", t.us / max(n_cells, 1),
+         f"cells={n_cells};total_s={t.s:.1f}")
+    for row in result["rankings"]["overall"]:
+        emit(f"fleet/overall/{row['scheduler']}", 0.0,
+             f"failed_tasks={row['pct_tasks_failed']:.2f}%;"
+             f"job_time={row['job_exec_time']:.1f}s")
+    save_json("fleet_sweep", result)
+    print(sweep_markdown(result))
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Minimal fleet-sweep walkthrough: compare FIFO vs ATLAS-FIFO across two
+failure regimes, then print the scenario library.
+
+Run:  PYTHONPATH=src python examples/fleet_sweep.py
+
+The ``__main__`` guard is required: the fleet's process pool uses the *spawn*
+start method, which re-imports the launching script in each worker.
+"""
+
+from repro.cluster.fleet import SweepSpec, run_sweep, sweep_markdown
+from repro.cluster.scenarios import SCENARIOS
+
+
+def main():
+    print("Scenario library:")
+    for name, sc in sorted(SCENARIOS.items()):
+        print(f"  {name:18s} {sc.description}")
+    print()
+
+    spec = SweepSpec(
+        schedulers=("fifo", "atlas-fifo"),
+        seeds=2,
+        scenarios=("baseline", "dn_loss"),
+        workloads=("smoke",),      # tiny mix; "default" is the paper's §5.1 mix
+    )
+    result = run_sweep(spec)       # parallel process pool by default
+    print(sweep_markdown(result))
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,6 @@ prefix cache discipline (re-prefill on the survivor).
 """
 
 import argparse
-import dataclasses
 import pathlib
 import random
 import sys

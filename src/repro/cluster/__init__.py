@@ -1,12 +1,32 @@
 from repro.cluster.chaos import ChaosConfig, ChaosInjector
+from repro.cluster.scenarios import (SCENARIOS, WORKLOAD_SHAPES, Scenario,
+                                     get_scenario, get_workload_shape,
+                                     scenario_chaos, workload_for_seed)
 from repro.cluster.simulator import (
     DEFAULT_FLEET, MACHINE_TYPES, MAP, REDUCE, Job, Node, Simulator, Task,
 )
 from repro.cluster.telemetry import FEATURE_NAMES, N_FEATURES, TelemetryTrace
 from repro.cluster.workload import WorkloadConfig, install, make_workload
 
+# fleet engine exports are lazy (PEP 562): repro.cluster.fleet pulls in the
+# predictor stack (JAX), and eagerly importing it here both slows package
+# import and trips runpy's double-import warning for `python -m
+# repro.cluster.fleet`
+_FLEET_NAMES = ("CellSpec", "SweepSpec", "aggregate", "cell_seed", "expand",
+                "run_sweep", "sweep_json", "sweep_markdown")
+
+
+def __getattr__(name):
+    if name in _FLEET_NAMES:
+        from repro.cluster import fleet
+        return getattr(fleet, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "ChaosConfig", "ChaosInjector", "DEFAULT_FLEET", "MACHINE_TYPES", "MAP",
-    "REDUCE", "Job", "Node", "Simulator", "Task", "FEATURE_NAMES", "N_FEATURES",
-    "TelemetryTrace", "WorkloadConfig", "install", "make_workload",
+    "REDUCE", "Job", "Node", "SCENARIOS", "Scenario", "Simulator", "Task",
+    "FEATURE_NAMES", "N_FEATURES", "TelemetryTrace", "WORKLOAD_SHAPES",
+    "WorkloadConfig", "get_scenario", "get_workload_shape", "install",
+    "make_workload", "scenario_chaos", "workload_for_seed", *_FLEET_NAMES,
 ]

@@ -10,7 +10,6 @@
 
 from __future__ import annotations
 
-import copy
 import dataclasses
 
 from repro.cluster.chaos import ChaosConfig, ChaosInjector
@@ -61,6 +60,38 @@ def run_atlas(name: str, cfg: ExperimentConfig,
     sim = _new_sim(sched, cfg, trace)
     metrics = sim.run()
     metrics["atlas"] = sched.stats()
+    return metrics, trace, sim
+
+
+def atlas_base_name(name: str) -> str | None:
+    """'atlas-fifo' -> 'fifo'; None for a plain baseline name."""
+    if name.startswith("atlas-"):
+        base = name[len("atlas-"):]
+        if base not in BASELINES:
+            raise KeyError(f"unknown ATLAS base scheduler {base!r}")
+        return base
+    if name not in BASELINES:
+        raise KeyError(f"unknown scheduler {name!r}")
+    return None
+
+
+def run_scheduler(name: str, cfg: ExperimentConfig,
+                  predictor: TaskPredictor | None = None, *, with_trace=True):
+    """One simulator run as a *pure function* of (scheduler name, config,
+    optional pre-trained predictor) — the unit the fleet sweep fans out.
+
+    For 'atlas-<base>' names a predictor trained on a prior base-scheduler run
+    should be passed in; the fleet reuses one training trace per (scenario,
+    workload, seed) across every ATLAS variant instead of re-training per cell.
+    Returns (metrics, trace, sim); metrics['sched_stats'] carries the
+    scheduler's per-run counters uniformly for every policy.
+    """
+    base = atlas_base_name(name)
+    if base is None:
+        metrics, trace, sim = run_baseline(name, cfg, with_trace=with_trace)
+    else:
+        metrics, trace, sim = run_atlas(base, cfg, predictor)
+    metrics["sched_stats"] = sim.scheduler.stats()
     return metrics, trace, sim
 
 

@@ -1,0 +1,468 @@
+"""Fleet sweep engine: declarative (schedulers x seeds x scenarios x workloads)
+run matrices, executed in parallel with per-run isolation and reduced into the
+paper's Figures 4-12 aggregates.
+
+The paper's §5 evaluation is a cross-scheduler, cross-failure-regime comparison;
+``repro.cluster.experiment`` runs exactly one (scheduler, seed, chaos) triple.
+This module is the scale layer on top of it:
+
+  SweepSpec ──expand──> [CellSpec...] ──fan-out──> per-cell metrics ──reduce──>
+      aggregates (mean / 95% CI of failed-job %, failed-task %, exec times)
+      + SWEEP.json (machine-readable) + SWEEP.md (ranking tables)
+
+Design points:
+
+* **Pure cells.**  Every cell is a pure function of its ``CellSpec`` via
+  ``experiment.run_scheduler``; cell seeds derive from a stable CRC32 of the
+  (scenario, workload, seed-index) coordinates, so the same spec always expands
+  to the same runs and the same ``SWEEP.json`` bytes — regardless of executor
+  kind, worker count, or completion order.
+* **Scheduler-matched conditions.**  Workload/chaos/hazard seeds deliberately
+  exclude the scheduler name: every scheduler in a sweep faces the identical
+  failure storm, as in the paper's protocol.
+* **Train-trace reuse.**  ATLAS cells need a predictor trained on a base-
+  scheduler trace.  The fleet runs one training wave per (base, scenario,
+  workload, seed) — reusing requested base cells as training runs when the base
+  matches — and ships the trace *datasets* (plain arrays) to the ATLAS wave,
+  instead of re-running the training simulation once per ATLAS cell.
+* **Process isolation.**  Cells run in a spawn-context process pool (fresh JAX
+  runtime per worker, no fork-after-init hazards); ``thread`` and ``serial``
+  executors exist for tests and debugging.
+
+CLI:
+
+  python -m repro.cluster.fleet \
+      --schedulers fifo,atlas-fifo --seeds 4 \
+      --scenarios baseline,bursty_tt,dn_loss [--workloads default] \
+      [--executor process|thread|serial] [--workers N] [--out experiments]
+"""
+
+from __future__ import annotations
+
+import argparse
+import concurrent.futures
+import dataclasses
+import json
+import math
+import multiprocessing
+import os
+import pathlib
+import sys
+import time
+import zlib
+
+from repro.cluster.experiment import (ExperimentConfig, atlas_base_name,
+                                      run_scheduler)
+from repro.cluster.scenarios import (SCENARIOS, WORKLOAD_SHAPES,
+                                     scenario_chaos, workload_for_seed)
+from repro.core.predictor import TaskPredictor
+
+# metrics reported in the ranking tables (subset of Simulator.metrics keys)
+TABLE_METRICS = ("pct_tasks_failed", "pct_jobs_failed", "job_exec_time",
+                 "sim_time")
+
+
+# ---------------------------------------------------------------------------
+# Spec + matrix expansion
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """One run of the matrix: a scheduler at a (scenario, workload, seed)."""
+    scheduler: str
+    scenario: str
+    workload: str
+    seed_index: int
+
+    @property
+    def env_key(self) -> tuple:
+        """Scheduler-independent coordinates: every scheduler sees the same
+        workload + failure storm at a given env_key (paper §5 protocol)."""
+        return (self.scenario, self.workload, self.seed_index)
+
+    @property
+    def cell_id(self) -> str:
+        return (f"{self.scenario}/{self.workload}/{self.scheduler}"
+                f"/s{self.seed_index}")
+
+
+@dataclasses.dataclass
+class SweepSpec:
+    """Declarative sweep: the cross product of four axes plus shared knobs."""
+    schedulers: tuple = ("fifo", "atlas-fifo")
+    seeds: int | tuple = 3            # count (0..n-1) or explicit indices
+    scenarios: tuple = ("baseline",)
+    workloads: tuple = ("default",)
+    algo: str = "R.F."
+    threshold: float = 0.5
+    n_speculative: int = 2
+    heartbeat_interval: float = 600.0
+
+    def seed_indices(self) -> tuple:
+        if isinstance(self.seeds, int):
+            return tuple(range(self.seeds))
+        return tuple(self.seeds)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["seeds"] = list(self.seed_indices())
+        for k in ("schedulers", "scenarios", "workloads"):
+            d[k] = list(d[k])
+        return d
+
+
+def cell_seed(*parts) -> int:
+    """Stable, platform-independent seed from cell coordinates (CRC32, not
+    Python's salted hash) — same spec => same seeds => same SWEEP.json."""
+    return zlib.crc32("|".join(str(p) for p in parts).encode()) & 0x7FFFFFFF
+
+
+def expand(spec: SweepSpec) -> list[CellSpec]:
+    """Expand the spec into its deduplicated, deterministically ordered matrix."""
+    for s in spec.scenarios:
+        if s not in SCENARIOS:
+            raise KeyError(f"unknown scenario {s!r}; known: "
+                           f"{', '.join(sorted(SCENARIOS))}")
+    for w in spec.workloads:
+        if w not in WORKLOAD_SHAPES:
+            raise KeyError(f"unknown workload shape {w!r}; known: "
+                           f"{', '.join(sorted(WORKLOAD_SHAPES))}")
+    for name in spec.schedulers:
+        atlas_base_name(name)  # raises on unknown scheduler
+    from repro.ml.models import ALL_MODELS
+    if spec.algo not in ALL_MODELS:
+        raise KeyError(f"unknown predictor algo {spec.algo!r}; known: "
+                       f"{', '.join(sorted(ALL_MODELS))}")
+    cells = {
+        CellSpec(scheduler=sched, scenario=sc, workload=wl, seed_index=si)
+        for sc in spec.scenarios for wl in spec.workloads
+        for sched in spec.schedulers for si in spec.seed_indices()
+    }
+    return sorted(cells, key=lambda c: (c.scenario, c.workload, c.scheduler,
+                                        c.seed_index))
+
+
+def cell_config(spec: SweepSpec, cell: CellSpec) -> ExperimentConfig:
+    env = cell.env_key
+    return ExperimentConfig(
+        workload=workload_for_seed(cell.workload, cell_seed("workload", *env)),
+        chaos=scenario_chaos(cell.scenario, cell_seed("chaos", *env)),
+        seed=cell_seed("sim", *env),
+        heartbeat_interval=spec.heartbeat_interval,
+        algo=spec.algo, threshold=spec.threshold,
+        n_speculative=spec.n_speculative)
+
+
+# ---------------------------------------------------------------------------
+# Cell execution (top-level functions: picklable into spawn workers)
+# ---------------------------------------------------------------------------
+
+def _numeric_metrics(metrics: dict) -> dict:
+    return {k: float(v) for k, v in metrics.items()
+            if isinstance(v, (int, float))}
+
+
+def _run_base_cell(args):
+    """Wave 1: a base-scheduler cell.  Returns its metrics plus — when some
+    ATLAS cell needs this (base, env) as a training run — the trace datasets."""
+    cell, cfg, want_trace = args
+    metrics, trace, _ = run_scheduler(cell.scheduler, cfg,
+                                      with_trace=want_trace)
+    datasets = trace.datasets() if want_trace else None
+    return cell, _numeric_metrics(metrics), metrics["sched_stats"], datasets
+
+
+def _run_atlas_cell(args):
+    """Wave 2: an ATLAS cell; fits the predictor from the shipped training
+    datasets (one simulated training run shared across the matrix)."""
+    cell, cfg, datasets = args
+    predictor = TaskPredictor(algo=cfg.algo, seed=cfg.seed)
+    if datasets is not None:
+        predictor.fit_datasets(*datasets)
+    metrics, _, _ = run_scheduler(cell.scheduler, cfg, predictor)
+    return cell, _numeric_metrics(metrics), metrics["sched_stats"]
+
+
+class _SerialExecutor:
+    def map(self, fn, it):
+        return list(map(fn, it))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def _make_executor(kind: str, workers: int | None):
+    if kind == "serial":
+        return _SerialExecutor()
+    if kind == "thread":
+        return concurrent.futures.ThreadPoolExecutor(max_workers=workers)
+    if kind == "process":
+        # spawn, not fork: workers get a fresh JAX runtime (fork after backend
+        # init deadlocks) and behave identically across platforms
+        ctx = multiprocessing.get_context("spawn")
+        return concurrent.futures.ProcessPoolExecutor(
+            max_workers=workers or os.cpu_count(), mp_context=ctx)
+    raise ValueError(f"unknown executor {kind!r} (process|thread|serial)")
+
+
+# ---------------------------------------------------------------------------
+# Sweep driver
+# ---------------------------------------------------------------------------
+
+def run_sweep(spec: SweepSpec, *, executor: str = "process",
+              workers: int | None = None, log=print) -> dict:
+    """Execute the full matrix; returns the SWEEP result dict (see sweep_json).
+
+    Two waves: (1) all base-scheduler cells plus any training-only runs ATLAS
+    cells require, (2) all ATLAS cells with pre-trained predictors.  Cells
+    within a wave run in parallel; results are keyed by cell id so completion
+    order never affects the output.
+    """
+    t0 = time.perf_counter()
+    cells = expand(spec)
+    base_cells = [c for c in cells if atlas_base_name(c.scheduler) is None]
+    atlas_cells = [c for c in cells if atlas_base_name(c.scheduler) is not None]
+
+    # training runs needed: one per (base, env) over the ATLAS cells
+    needed_train = {(atlas_base_name(c.scheduler),) + c.env_key
+                    for c in atlas_cells}
+    covered = {(c.scheduler,) + c.env_key for c in base_cells}
+    train_only = sorted(needed_train - covered)
+    train_cells = [CellSpec(scheduler=base, scenario=sc, workload=wl,
+                            seed_index=si)
+                   for base, sc, wl, si in train_only]
+
+    wave1 = [(c, cell_config(spec, c), (c.scheduler,) + c.env_key
+              in needed_train) for c in base_cells]
+    wave1 += [(c, cell_config(spec, c), True) for c in train_cells]
+
+    log(f"[fleet] {len(cells)} cells "
+        f"({len(base_cells)} base + {len(atlas_cells)} atlas), "
+        f"{len(train_cells)} extra training runs, executor={executor}")
+
+    results: dict[str, dict] = {}
+    train_data: dict[tuple, object] = {}
+    with _make_executor(executor, workers) as pool:
+        for cell, metrics, stats, datasets in pool.map(_run_base_cell, wave1):
+            if datasets is not None:
+                train_data[(cell.scheduler,) + cell.env_key] = datasets
+            results[cell.cell_id] = _cell_record(cell, metrics, stats)
+        log(f"[fleet] wave 1 done: {len(wave1)} runs, "
+            f"{len(train_data)} training traces "
+            f"({time.perf_counter() - t0:.1f}s)")
+
+        wave2 = [(c, cell_config(spec, c),
+                  train_data.get((atlas_base_name(c.scheduler),) + c.env_key))
+                 for c in atlas_cells]
+        for cell, metrics, stats in pool.map(_run_atlas_cell, wave2):
+            results[cell.cell_id] = _cell_record(cell, metrics, stats)
+    log(f"[fleet] wave 2 done: {len(atlas_cells)} atlas runs "
+        f"({time.perf_counter() - t0:.1f}s total)")
+
+    # keep only requested cells (training-only runs served their purpose)
+    wanted = {c.cell_id for c in cells}
+    records = [results[cid] for cid in sorted(wanted)]
+    aggregates = aggregate(records)
+    return {
+        "spec": spec.to_json(),
+        "cells": records,
+        "aggregates": aggregates,
+        "rankings": rank(aggregates),
+    }
+
+
+def _cell_record(cell: CellSpec, metrics: dict, stats: dict) -> dict:
+    return {
+        "cell_id": cell.cell_id,
+        "scheduler": cell.scheduler,
+        "scenario": cell.scenario,
+        "workload": cell.workload,
+        "seed_index": cell.seed_index,
+        "metrics": metrics,
+        "stats": dict(stats),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Reduction: aggregates + rankings + rendering
+# ---------------------------------------------------------------------------
+
+def mean_ci(values) -> dict:
+    """Mean and normal-approximation 95% CI half-width (sample std, ddof=1)."""
+    xs = [float(v) for v in values]
+    n = len(xs)
+    mean = sum(xs) / n if n else 0.0
+    if n > 1:
+        var = sum((x - mean) ** 2 for x in xs) / (n - 1)
+        ci95 = 1.96 * math.sqrt(var) / math.sqrt(n)
+    else:
+        ci95 = 0.0
+    return {"mean": mean, "ci95": ci95, "n": n}
+
+
+def aggregate(records: list[dict]) -> dict:
+    """Reduce per-cell metrics over seeds: {scenario/workload/scheduler:
+    {metric: {mean, ci95, n}}}."""
+    groups: dict[str, list[dict]] = {}
+    for r in records:
+        key = f"{r['scenario']}/{r['workload']}/{r['scheduler']}"
+        groups.setdefault(key, []).append(r)
+    out = {}
+    for key, rs in sorted(groups.items()):
+        metric_names = sorted({m for r in rs for m in r["metrics"]})
+        out[key] = {m: mean_ci([r["metrics"][m] for r in rs
+                                if m in r["metrics"]])
+                    for m in metric_names}
+    return out
+
+
+def rank(aggregates: dict) -> dict:
+    """Per (scenario, workload): schedulers best-first by mean failed-task %,
+    then mean job runtime; plus an overall ranking averaged over scenarios."""
+    per_env: dict[str, list] = {}
+    overall: dict[str, list] = {}
+    for key, metrics in aggregates.items():
+        scenario, workload, scheduler = key.rsplit("/", 2)
+        env = f"{scenario}/{workload}"
+        row = (metrics["pct_tasks_failed"]["mean"],
+               metrics["job_exec_time"]["mean"], scheduler)
+        per_env.setdefault(env, []).append(row)
+        overall.setdefault(scheduler, []).append(row[:2])
+    rankings = {env: [{"scheduler": s, "pct_tasks_failed": ft,
+                       "job_exec_time": jt}
+                      for ft, jt, s in sorted(rows)]
+                for env, rows in sorted(per_env.items())}
+    overall_rows = sorted(
+        (sum(ft for ft, _ in rows) / len(rows),
+         sum(jt for _, jt in rows) / len(rows), s)
+        for s, rows in overall.items())
+    rankings["overall"] = [{"scheduler": s, "pct_tasks_failed": ft,
+                            "job_exec_time": jt}
+                           for ft, jt, s in overall_rows]
+    return rankings
+
+
+def _round_floats(obj, ndigits: int = 6):
+    if isinstance(obj, float):
+        return round(obj, ndigits)
+    if isinstance(obj, dict):
+        return {k: _round_floats(v, ndigits) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_round_floats(v, ndigits) for v in obj]
+    return obj
+
+
+def sweep_json(result: dict) -> str:
+    """Canonical byte-stable serialisation: sorted keys, floats rounded to 6
+    decimals, no timestamps — re-running the same spec reproduces these bytes."""
+    return json.dumps(_round_floats(result), indent=2, sort_keys=True) + "\n"
+
+
+def sweep_markdown(result: dict) -> str:
+    """Ranking tables (schedulers best-first by failed-task %, then runtime)."""
+    agg = result["aggregates"]
+    rankings = result["rankings"]
+    lines = ["# Fleet sweep", ""]
+    spec = result["spec"]
+    lines.append(f"Schedulers: {', '.join(spec['schedulers'])} — "
+                 f"seeds: {len(spec['seeds'])} — "
+                 f"scenarios: {', '.join(spec['scenarios'])} — "
+                 f"workloads: {', '.join(spec['workloads'])}")
+    header = ("| scheduler | failed tasks % | failed jobs % | job time (s) "
+              "| sim time (s) |")
+    sep = "|---|---|---|---|---|"
+
+    def fmt(m):
+        return f"{m['mean']:.2f} ± {m['ci95']:.2f}"
+
+    for env, rows in rankings.items():
+        if env == "overall":
+            continue
+        lines += ["", f"## {env}", "", header, sep]
+        for row in rows:
+            m = agg[f"{env}/{row['scheduler']}"]
+            lines.append("| " + " | ".join(
+                [row["scheduler"]] + [fmt(m[k]) for k in TABLE_METRICS]) + " |")
+    lines += ["", "## overall (mean over scenarios)", "",
+              "| rank | scheduler | failed tasks % | job time (s) |",
+              "|---|---|---|---|"]
+    for i, row in enumerate(rankings["overall"], 1):
+        lines.append(f"| {i} | {row['scheduler']} | "
+                     f"{row['pct_tasks_failed']:.2f} | "
+                     f"{row['job_exec_time']:.1f} |")
+    return "\n".join(lines) + "\n"
+
+
+def write_outputs(result: dict, out_dir) -> tuple[pathlib.Path, pathlib.Path]:
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    jp = out / "SWEEP.json"
+    mp = out / "SWEEP.md"
+    jp.write_text(sweep_json(result))
+    mp.write_text(sweep_markdown(result))
+    return jp, mp
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _parse_seeds(s: str):
+    if "," in s:
+        return tuple(int(x) for x in s.split(",") if x != "")
+    return int(s)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.cluster.fleet",
+        description="Fleet-scale scheduler sweep over chaos scenarios")
+    ap.add_argument("--schedulers", default="fifo,atlas-fifo",
+                    help="comma list: fifo,fair,capacity,atlas-<base>")
+    ap.add_argument("--seeds", default="3", type=_parse_seeds,
+                    help="seed count (N => 0..N-1) or comma list of indices")
+    ap.add_argument("--scenarios", default="baseline",
+                    help=f"comma list or 'all' ({', '.join(sorted(SCENARIOS))})")
+    ap.add_argument("--workloads", default="default",
+                    help="comma list: " + ", ".join(sorted(WORKLOAD_SHAPES)))
+    ap.add_argument("--algo", default="R.F.")
+    ap.add_argument("--executor", default="process",
+                    choices=("process", "thread", "serial"))
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--out", default="experiments",
+                    help="directory for SWEEP.json + SWEEP.md")
+    ap.add_argument("--list-scenarios", action="store_true")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_scenarios:
+        for name, sc in sorted(SCENARIOS.items()):
+            print(f"{name:18s} {sc.description}")
+        return 0
+    scenarios = (tuple(sorted(SCENARIOS)) if args.scenarios == "all"
+                 else tuple(args.scenarios.split(",")))
+    spec = SweepSpec(
+        schedulers=tuple(args.schedulers.split(",")),
+        seeds=args.seeds,
+        scenarios=scenarios,
+        workloads=tuple(args.workloads.split(",")),
+        algo=args.algo)
+    try:
+        expand(spec)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    result = run_sweep(spec, executor=args.executor, workers=args.workers)
+    jp, mp = write_outputs(result, args.out)
+    sys.stdout.write(sweep_markdown(result))
+    print(f"[fleet] wrote {jp} and {mp}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

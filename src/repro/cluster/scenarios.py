@@ -1,0 +1,166 @@
+"""Named chaos scenarios + workload shapes — the sweep axes of the fleet engine.
+
+The paper's §5 evaluation (and the follow-up literature: model-checking sweeps of
+Hadoop schedulers, Google-trace failure studies) compares schedulers over a
+*matrix* of failure regimes, not a single chaos configuration.  Each scenario here
+is a named, documented point in that matrix, expressed as a ``ChaosConfig``
+template on top of the existing injector:
+
+  baseline          the paper's calibrated default (§5.1 Google-trace ceiling)
+  bursty_tt         frequent correlated TaskTracker crash bursts (power events)
+  dn_loss           DataNode-dominated failures -> input-block unavailability
+  slot_degradation  latent thread-kill degradation: nodes stay up but rot
+  net_flap          rapid short network slow-downs/drops (flapping switches)
+  rack_failure      rare but huge correlated outages with long recovery
+  straggler_heavy   suspensions + slow links: few hard failures, many stragglers
+  kitchen_sink      everything at once at high intensity (stress ceiling)
+
+The branch weights feed ``ChaosInjector.fire``'s cumulative draw: kill_tt,
+suspend_tt, kill_dn, net_slow, net_drop are consumed in order and the residual
+mass is the thread-kill (latent degradation) branch, so weights must sum to <= 1.
+
+Workload shapes are the second declarative axis: named ``WorkloadConfig``
+templates (job mix size/shape), including the tiny ``smoke`` shape CI sweeps use.
+
+Per-cell seeds are injected by the fleet (``scenario_chaos``), never baked into
+the templates, so one scenario fans out across any number of seeded repeats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.cluster.chaos import ChaosConfig
+from repro.cluster.workload import WorkloadConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    chaos: ChaosConfig
+
+    def chaos_for_seed(self, seed: int) -> ChaosConfig:
+        return dataclasses.replace(self.chaos, seed=seed)
+
+
+def _chaos(**kw) -> ChaosConfig:
+    cfg = ChaosConfig(**kw)
+    event_mass = (cfg.kill_tt + cfg.suspend_tt + cfg.kill_dn + cfg.net_slow
+                  + cfg.net_drop)
+    if event_mass > 1.0 + 1e-9:
+        raise ValueError(f"chaos branch weights sum to {event_mass} > 1")
+    return cfg
+
+
+SCENARIOS: dict[str, Scenario] = {}
+
+
+def _register(name: str, description: str, chaos: ChaosConfig) -> Scenario:
+    sc = Scenario(name, description, chaos)
+    SCENARIOS[name] = sc
+    return sc
+
+
+_register(
+    "baseline",
+    "Paper §5.1 calibrated default: mixed failures near the Google-trace ceiling",
+    _chaos())
+
+_register(
+    "bursty_tt",
+    "Correlated TaskTracker crash bursts (power events) dominate; the regime the "
+    "adaptive heartbeat's 1/3-of-TTs rule targets",
+    _chaos(intensity=6.0, kill_tt=0.50, suspend_tt=0.10, kill_dn=0.05,
+           net_slow=0.10, net_drop=0.05, burst_prob=0.30, burst_size=(5, 9),
+           mean_outage=700.0))
+
+_register(
+    "dn_loss",
+    "DataNode-dominated failures: HDFS block replicas vanish, maps hit "
+    "input-unavailable faults",
+    _chaos(intensity=5.5, kill_tt=0.08, suspend_tt=0.05, kill_dn=0.60,
+           net_slow=0.10, net_drop=0.05, mean_outage=1200.0, burst_prob=0.02))
+
+_register(
+    "slot_degradation",
+    "Nodes stay nominally alive but thread kills rot their latent health; "
+    "failures look idiopathic to a liveness-only scheduler",
+    _chaos(intensity=6.5, kill_tt=0.05, suspend_tt=0.05, kill_dn=0.04,
+           net_slow=0.08, net_drop=0.03, mean_outage=1500.0, burst_prob=0.01))
+
+_register(
+    "net_flap",
+    "Flapping network: frequent short slow-downs and drops, quick recovery",
+    _chaos(intensity=7.5, kill_tt=0.05, suspend_tt=0.05, kill_dn=0.05,
+           net_slow=0.50, net_drop=0.25, mean_outage=300.0,
+           mean_interarrival=180.0, burst_prob=0.01))
+
+_register(
+    "rack_failure",
+    "Rare correlated rack-scale outages with long recovery (paper §1: power "
+    "problems take down large machine groups at once)",
+    _chaos(intensity=3.5, kill_tt=0.30, suspend_tt=0.05, kill_dn=0.20,
+           net_slow=0.10, net_drop=0.05, burst_prob=0.45, burst_size=(6, 10),
+           mean_outage=1800.0))
+
+_register(
+    "straggler_heavy",
+    "Few hard failures, many stragglers: suspensions and slow links stretch "
+    "task runtimes (the speculative-execution battleground)",
+    _chaos(intensity=6.0, kill_tt=0.04, suspend_tt=0.40, kill_dn=0.03,
+           net_slow=0.40, net_drop=0.03, mean_outage=900.0, burst_prob=0.01))
+
+_register(
+    "kitchen_sink",
+    "Everything at once at high intensity — the stress ceiling every scheduler "
+    "should degrade gracefully under",
+    _chaos(intensity=9.0, kill_tt=0.22, suspend_tt=0.12, kill_dn=0.16,
+           net_slow=0.22, net_drop=0.08, burst_prob=0.10, burst_size=(4, 8),
+           mean_outage=1100.0))
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        known = ", ".join(sorted(SCENARIOS))
+        raise KeyError(f"unknown scenario {name!r}; known: {known}") from None
+
+
+def scenario_chaos(name: str, seed: int) -> ChaosConfig:
+    """ChaosConfig for a named scenario with the fleet's per-cell seed."""
+    return get_scenario(name).chaos_for_seed(seed)
+
+
+# ---------------------------------------------------------------------------
+# Workload shapes (the fourth sweep axis)
+# ---------------------------------------------------------------------------
+
+WORKLOAD_SHAPES: dict[str, WorkloadConfig] = {
+    # the paper's §5.1 mix
+    "default": WorkloadConfig(),
+    # tiny shape for CI smoke sweeps and unit tests: seconds per cell
+    "smoke": WorkloadConfig(n_single=6, n_chains=1, chain_len_range=(3, 4),
+                            maps_range=(4, 8), reduces_range=(2, 6),
+                            submit_horizon=2400.0),
+    # long chained pipelines dominate (cascade-failure sensitivity)
+    "chain_heavy": WorkloadConfig(n_single=12, n_chains=16,
+                                  chain_len_range=(6, 14)),
+    # many small map-dominated jobs (TeraGen-ish scan shape)
+    "map_heavy": WorkloadConfig(n_single=64, n_chains=4, maps_range=(10, 24),
+                                reduces_range=(1, 4)),
+}
+
+
+def get_workload_shape(name: str) -> WorkloadConfig:
+    try:
+        return WORKLOAD_SHAPES[name]
+    except KeyError:
+        known = ", ".join(sorted(WORKLOAD_SHAPES))
+        raise KeyError(f"unknown workload shape {name!r}; known: {known}") \
+            from None
+
+
+def workload_for_seed(name: str, seed: int) -> WorkloadConfig:
+    return dataclasses.replace(get_workload_shape(name), seed=seed)

@@ -22,7 +22,7 @@ import heapq
 import math
 import random
 from collections import defaultdict, deque
-from typing import Any, Callable, Optional
+from typing import Any
 
 # ---------------------------------------------------------------------------
 # Machine fleet (Table 2 of the paper)

@@ -16,7 +16,6 @@ model retraining (every 10 simulated minutes, §5.1)."""
 
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 
 from repro.cluster.simulator import EV_RETRAIN, MAP
@@ -33,6 +32,7 @@ class ATLASScheduler(Scheduler):
                  retrain_every: float = 600.0,
                  heartbeat: HeartbeatController | None = None,
                  max_penalty_box: int = 512, penalty_timeout: float = 150.0):
+        super().__init__()
         self.base = base
         self.name = f"atlas-{base.name}"
         self.predictor = predictor or TaskPredictor()
@@ -89,7 +89,7 @@ class ATLASScheduler(Scheduler):
                 sim.detect_tt_failure(node)
                 alt = self._best_alternative(task, exclude={node.nid})
                 if alt is not None:
-                    return sim.launch(task, alt, speculative=speculative)
+                    return self.launch(task, alt, speculative=speculative)
                 return self._penalize(task)
             if task.kind == MAP and task.block_nodes and not any(
                     sim.nodes[b].dn_alive for b in task.block_nodes):
@@ -101,9 +101,9 @@ class ATLASScheduler(Scheduler):
             if free <= 0:
                 alt = self._best_alternative(task, exclude={node.nid})
                 if alt is not None:
-                    return sim.launch(task, alt, speculative=speculative)
+                    return self.launch(task, alt, speculative=speculative)
                 return self._penalize(task)
-            return sim.launch(task, node, speculative=speculative)
+            return self.launch(task, node, speculative=speculative)
 
         # ---- predicted FAIL on the *proposed* node
         self.n_predicted_fail += 1
@@ -113,7 +113,7 @@ class ATLASScheduler(Scheduler):
         alt = self._best_alternative(task, exclude={node.nid})
         if alt is not None:
             self.n_relocations += 1
-            return sim.launch(task, alt, speculative=False)
+            return self.launch(task, alt, speculative=False)
         # predicted to fail everywhere -> multiple speculative instances, but only
         # with genuine spare capacity (never starve the normal queue)
         return self._execute_speculatively(task)
@@ -129,7 +129,7 @@ class ATLASScheduler(Scheduler):
         picked = [cands[i] for i in order[: self.n_speculative]]
         att = None
         for j, n in enumerate(picked):
-            att = sim.launch(task, n, speculative=(j > 0)) or att
+            att = self.launch(task, n, speculative=(j > 0)) or att
             self.n_speculative_launches += int(j > 0)
         return att
 
@@ -163,7 +163,7 @@ class ATLASScheduler(Scheduler):
             n_copies = self.n_speculative if spare else 1
             picked = [cands[i] for i in order[:n_copies]]
             for j, n in enumerate(picked):
-                sim.launch(task, n, speculative=(j > 0))
+                self.launch(task, n, speculative=(j > 0))
                 self.n_speculative_launches += int(j > 0)
             budget -= 1
 
@@ -196,6 +196,8 @@ class ATLASScheduler(Scheduler):
 
     def stats(self) -> dict:
         return {
+            "launches": self.n_launches,
+            "speculative_copies": self.n_speculative_copies,
             "predictions": self.n_predictions,
             "predicted_fail": self.n_predicted_fail,
             "relocations": self.n_relocations,

@@ -25,7 +25,12 @@ class TaskPredictor:
 
     # ------------------------------------------------------------------ train
     def fit(self, trace: TelemetryTrace) -> bool:
-        (mx, my), (rx, ry) = trace.datasets()
+        return self.fit_datasets(*trace.datasets())
+
+    def fit_datasets(self, map_data, reduce_data) -> bool:
+        """Fit from raw (X, y) arrays — the form the fleet sweep ships across
+        process boundaries so one training trace serves many cells."""
+        (mx, my), (rx, ry) = map_data, reduce_data
         trained = False
         rng = np.random.RandomState(self.seed + self.fits)
 

@@ -12,10 +12,8 @@ so tests can flip the whole model zoo onto interpret-mode kernels.
 
 from __future__ import annotations
 
-import functools
 import os
 
-import jax
 
 from repro.kernels import ref
 

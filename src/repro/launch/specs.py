@@ -15,7 +15,6 @@ from repro.models.steps import (
     abstract_train_state, make_decode_step, make_prefill_step, make_train_step,
     train_state_axes,
 )
-from repro.models.lm import cache_axes as lm_cache_axes
 from repro.optim import adamw
 from repro.parallel.axes import logical_to_spec, make_rules, tree_spec
 

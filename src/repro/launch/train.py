@@ -9,7 +9,6 @@ duplication, adaptive heartbeats)."""
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import pathlib
 
 from repro.configs import ARCH_IDS, get_arch, smoke_reduce

@@ -151,9 +151,37 @@ def fit_oblivious_forest(X: np.ndarray, y: np.ndarray, *, n_trees: int = 24,
     return ForestParams(feat_idx=feat_idx, thresholds=thresholds, leaves=leaves)
 
 
-def forest_predict(params: ForestParams, X: np.ndarray, *, impl: str = "xla",
+# Below this batch size the per-call dispatch overhead of the XLA/Pallas path
+# dwarfs the arithmetic; the scheduler's per-decision scoring (1-13 rows per
+# call) sits firmly in this regime, so it routes to the numpy mirror.
+SMALL_BATCH = 64
+
+
+def forest_predict_np(params: ForestParams, X: np.ndarray,
+                      tree_slice: slice | None = None) -> np.ndarray:
+    """Pure-numpy mirror of ``kernels.ref.forest_infer_ref`` for tiny batches."""
+    x = np.asarray(X, np.float32)
+    fi, th, lv = params.feat_idx, params.thresholds, params.leaves
+    if tree_slice is not None:
+        fi, th, lv = fi[tree_slice], th[tree_slice], lv[tree_slice]
+    B = x.shape[0]
+    T, D = fi.shape
+    gathered = x[:, fi.reshape(-1)].reshape(B, T, D)
+    bits = (gathered > th[None].astype(np.float32)).astype(np.int64)
+    weights = 2 ** np.arange(D - 1, -1, -1)
+    leaf_idx = (bits * weights[None, None, :]).sum(-1)          # (B, T)
+    vals = lv.astype(np.float32)[np.arange(T)[None, :], leaf_idx]  # (B, T)
+    return vals.mean(axis=1)
+
+
+def forest_predict(params: ForestParams, X: np.ndarray, *, impl: str | None = None,
                    tree_slice: slice | None = None) -> np.ndarray:
-    """Mean leaf value over trees — a probability for {0,1} targets."""
+    """Mean leaf value over trees — a probability for {0,1} targets.
+
+    impl=None auto-routes: numpy mirror for small batches, the kernel path
+    otherwise.  Pass impl="numpy"/"xla"/... to force a specific path."""
+    if impl == "numpy" or (impl is None and X.shape[0] <= SMALL_BATCH):
+        return forest_predict_np(params, X, tree_slice)
     from repro.kernels import ops
     fi, th, lv = params.feat_idx, params.thresholds, params.leaves
     if tree_slice is not None:

@@ -13,9 +13,7 @@ JAX.  Standardisation is folded into fit."""
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-import time
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ per the config.  Three entry points per family:
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -5,7 +5,6 @@ multi-pod dry-run lowers."""
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -23,7 +23,6 @@ actual failure notifications); on CPU it runs a reduced model over N fake hosts.
 from __future__ import annotations
 
 import dataclasses
-import math
 import random
 import time
 from collections import deque

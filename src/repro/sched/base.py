@@ -7,14 +7,17 @@ baseline."""
 
 from __future__ import annotations
 
-import dataclasses
 from collections import defaultdict
 
-from repro.cluster.simulator import MAP, REDUCE, Node, Task
+from repro.cluster.simulator import MAP, Node, Task
 
 
 class Scheduler:
     name = "base"
+
+    def __init__(self):
+        self.n_launches = 0
+        self.n_speculative_copies = 0
 
     def bind(self, sim):
         self.sim = sim
@@ -72,7 +75,18 @@ class Scheduler:
         return min(nodes, key=lambda n: (len(n.running), n.nid))
 
     def launch(self, task: Task, node: Node, *, speculative=False):
+        self.n_launches += 1
+        self.n_speculative_copies += int(speculative)
         return self.sim.launch(task, node, speculative=speculative)
+
+    def stats(self) -> dict:
+        """Uniform per-run counters every scheduler exposes; the fleet sweep
+        surfaces these per cell (ATLAS extends with its Algorithm-1 stats).
+        speculative_copies counts every redundant copy launched, whatever the
+        trigger (straggler speculation here; also predicted-failure replication
+        under ATLAS)."""
+        return {"launches": self.n_launches,
+                "speculative_copies": self.n_speculative_copies}
 
     # --- policy body
     def schedule(self):

@@ -2,6 +2,9 @@
 distribution layer rests on."""
 
 import jax
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
@@ -11,7 +14,10 @@ LOGICAL = sorted(DEFAULT_RULES)
 
 
 def _mesh(names=("data", "model")):
-    return jax.sharding.AbstractMesh((2,) * len(names), names)
+    try:
+        return jax.sharding.AbstractMesh((2,) * len(names), names)
+    except TypeError:   # jax<=0.4.37 signature: tuple of (name, size) pairs
+        return jax.sharding.AbstractMesh(tuple((n, 2) for n in names))
 
 
 @settings(max_examples=50, deadline=None)

@@ -1,0 +1,183 @@
+"""Fleet sweep engine tests: matrix expansion, deterministic per-cell seeding,
+aggregate reducer math, end-to-end reproducibility, and per-cell stats."""
+
+import math
+
+import pytest
+
+from repro.cluster.experiment import atlas_base_name
+from repro.cluster.fleet import (CellSpec, SweepSpec, aggregate, cell_config,
+                                 cell_seed, expand, mean_ci, rank, run_sweep,
+                                 sweep_json, sweep_markdown)
+
+
+def _spec(**kw):
+    base = dict(schedulers=("fifo", "atlas-fifo"), seeds=2,
+                scenarios=("baseline", "bursty_tt"), workloads=("smoke",))
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# Matrix expansion
+# ---------------------------------------------------------------------------
+
+def test_expand_full_cross_product():
+    spec = _spec(schedulers=("fifo", "fair", "atlas-fifo"), seeds=3,
+                 scenarios=("baseline", "dn_loss"), workloads=("smoke",))
+    cells = expand(spec)
+    assert len(cells) == 3 * 3 * 2 * 1
+    assert len(set(cells)) == len(cells)
+    # deterministic ordering
+    assert cells == sorted(cells, key=lambda c: (c.scenario, c.workload,
+                                                 c.scheduler, c.seed_index))
+    assert expand(spec) == cells
+
+
+def test_expand_explicit_seed_indices_and_dedup():
+    spec = _spec(schedulers=("fifo", "fifo"), seeds=(0, 5),
+                 scenarios=("baseline",))
+    cells = expand(spec)
+    assert len(cells) == 2                       # duplicate scheduler deduped
+    assert sorted(c.seed_index for c in cells) == [0, 5]
+
+
+@pytest.mark.parametrize("bad", [
+    dict(scenarios=("no_such_scenario",)),
+    dict(workloads=("no_such_shape",)),
+    dict(schedulers=("atlas-nope",)),
+    dict(schedulers=("srtf",)),
+])
+def test_expand_rejects_unknown_axis_values(bad):
+    with pytest.raises(KeyError):
+        expand(_spec(**bad))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic per-cell seeding
+# ---------------------------------------------------------------------------
+
+def test_cell_seed_stable_and_distinct():
+    a = cell_seed("chaos", "baseline", "smoke", 0)
+    assert a == cell_seed("chaos", "baseline", "smoke", 0)
+    others = {cell_seed("chaos", sc, "smoke", si)
+              for sc in ("baseline", "bursty_tt", "dn_loss")
+              for si in range(4)}
+    assert len(others) == 12                     # no collisions on real axes
+
+
+def test_cell_config_scheduler_independent_conditions():
+    """Every scheduler must face the identical workload + failure storm at a
+    given (scenario, workload, seed) — the paper's matched-conditions protocol."""
+    spec = _spec()
+    fifo = CellSpec("fifo", "baseline", "smoke", 1)
+    atlas = CellSpec("atlas-fifo", "baseline", "smoke", 1)
+    cf, ca = cell_config(spec, fifo), cell_config(spec, atlas)
+    assert cf.workload == ca.workload
+    assert cf.chaos == ca.chaos
+    assert cf.seed == ca.seed
+    # ...but different coordinates get different seeds
+    other = cell_config(spec, CellSpec("fifo", "bursty_tt", "smoke", 1))
+    assert other.chaos.seed != cf.chaos.seed
+    assert other.workload.seed != cf.workload.seed
+
+
+# ---------------------------------------------------------------------------
+# Reducer math
+# ---------------------------------------------------------------------------
+
+def test_mean_ci_math():
+    r = mean_ci([1.0, 2.0, 3.0, 4.0])
+    assert r["n"] == 4 and r["mean"] == pytest.approx(2.5)
+    sd = math.sqrt(sum((x - 2.5) ** 2 for x in (1, 2, 3, 4)) / 3)
+    assert r["ci95"] == pytest.approx(1.96 * sd / 2.0)
+    assert mean_ci([7.0]) == {"mean": 7.0, "ci95": 0.0, "n": 1}
+
+
+def _rec(sched, scen, seed, **metrics):
+    return {"cell_id": f"{scen}/smoke/{sched}/s{seed}", "scheduler": sched,
+            "scenario": scen, "workload": "smoke", "seed_index": seed,
+            "metrics": metrics, "stats": {}}
+
+
+def test_aggregate_groups_over_seeds():
+    recs = [_rec("fifo", "baseline", 0, pct_tasks_failed=10.0,
+                 job_exec_time=100.0),
+            _rec("fifo", "baseline", 1, pct_tasks_failed=20.0,
+                 job_exec_time=300.0),
+            _rec("fifo", "dn_loss", 0, pct_tasks_failed=50.0,
+                 job_exec_time=500.0)]
+    agg = aggregate(recs)
+    assert set(agg) == {"baseline/smoke/fifo", "dn_loss/smoke/fifo"}
+    base = agg["baseline/smoke/fifo"]
+    assert base["pct_tasks_failed"]["mean"] == pytest.approx(15.0)
+    assert base["pct_tasks_failed"]["n"] == 2
+    assert agg["dn_loss/smoke/fifo"]["job_exec_time"]["ci95"] == 0.0
+
+
+def test_rank_orders_by_failed_tasks_then_runtime():
+    recs = [_rec("fifo", "baseline", 0, pct_tasks_failed=30.0,
+                 pct_jobs_failed=1.0, job_exec_time=100.0, sim_time=1.0),
+            _rec("atlas-fifo", "baseline", 0, pct_tasks_failed=10.0,
+                 pct_jobs_failed=1.0, job_exec_time=200.0, sim_time=1.0)]
+    rk = rank(aggregate(recs))
+    assert [r["scheduler"] for r in rk["baseline/smoke"]] == \
+        ["atlas-fifo", "fifo"]
+    assert rk["overall"][0]["scheduler"] == "atlas-fifo"
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: reproducibility + per-cell stats surfaced
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_sweep():
+    spec = _spec(scenarios=("baseline",))
+    return spec, run_sweep(spec, executor="serial", log=lambda *a: None)
+
+
+def test_sweep_json_reproducible_byte_identical(small_sweep):
+    spec, result = small_sweep
+    again = run_sweep(spec, executor="serial", log=lambda *a: None)
+    assert sweep_json(result) == sweep_json(again)
+
+
+def test_sweep_covers_every_cell_with_stats(small_sweep):
+    spec, result = small_sweep
+    cells = expand(spec)
+    assert [r["cell_id"] for r in result["cells"]] == \
+        sorted(c.cell_id for c in cells)
+    for r in result["cells"]:
+        assert r["metrics"]["jobs_total"] > 0
+        assert "launches" in r["stats"]
+        if atlas_base_name(r["scheduler"]) is not None:
+            # ATLAS Algorithm-1 stats surfaced per cell
+            assert "predictions" in r["stats"]
+            assert r["stats"]["predictions"] > 0
+
+
+def test_sweep_thread_executor_matches_serial(small_sweep):
+    spec, result = small_sweep
+    threaded = run_sweep(spec, executor="thread", workers=2,
+                         log=lambda *a: None)
+    assert sweep_json(threaded) == sweep_json(result)
+
+
+def test_sweep_atlas_only_spawns_training_runs():
+    """With no base-scheduler cells to reuse, the fleet must add training-only
+    runs for each (base, scenario, workload, seed) and still report only the
+    requested cells."""
+    spec = _spec(schedulers=("atlas-fifo",), seeds=1, scenarios=("baseline",))
+    result = run_sweep(spec, executor="serial", log=lambda *a: None)
+    assert [r["scheduler"] for r in result["cells"]] == ["atlas-fifo"]
+    assert result["cells"][0]["stats"]["predictions"] > 0
+
+
+def test_sweep_markdown_mentions_every_scheduler_and_scenario(small_sweep):
+    spec, result = small_sweep
+    md = sweep_markdown(result)
+    for s in spec.schedulers:
+        assert s in md
+    for sc in spec.scenarios:
+        assert sc in md
+    assert "## overall" in md

@@ -190,3 +190,34 @@ def test_forest_infer_vs_sklearn_style_traversal():
     got = forest_infer(jnp.asarray(x), jnp.asarray(feat_idx, jnp.int32),
                        jnp.asarray(thr), jnp.asarray(leaves), interpret=True)
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+def test_forest_predict_np_matches_kernel_reference():
+    """The numpy small-batch mirror (the scheduler's per-decision inference
+    path) must agree with the XLA/ref kernel path — including tree_slice —
+    for batches on both sides of the SMALL_BATCH routing threshold."""
+    from repro.ml.forest import (ForestParams, SMALL_BATCH, forest_predict,
+                                 forest_predict_np)
+    rs = np.random.RandomState(3)
+    F, T, D = 22, 24, 5
+    params = ForestParams(
+        feat_idx=rs.randint(0, F, (T, D)).astype(np.int32),
+        thresholds=rs.randn(T, D).astype(np.float32),
+        leaves=rs.rand(T, 2 ** D).astype(np.float32))
+    for B in (1, 13, SMALL_BATCH, SMALL_BATCH + 1, 200):
+        x = rs.randn(B, F).astype(np.float32)
+        want = np.asarray(ref.forest_infer_ref(
+            jnp.asarray(x), jnp.asarray(params.feat_idx),
+            jnp.asarray(params.thresholds), jnp.asarray(params.leaves)))
+        got_np = forest_predict_np(params, x)
+        got_routed = forest_predict(params, x)          # auto small/large path
+        np.testing.assert_allclose(got_np, want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(got_routed, want, rtol=1e-5, atol=1e-6)
+    # tree_slice parity on a sub-forest
+    x = rs.randn(9, F).astype(np.float32)
+    sl = slice(4, 16)
+    want = np.asarray(ref.forest_infer_ref(
+        jnp.asarray(x), jnp.asarray(params.feat_idx[sl]),
+        jnp.asarray(params.thresholds[sl]), jnp.asarray(params.leaves[sl])))
+    got = forest_predict_np(params, x, tree_slice=sl)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

@@ -3,6 +3,7 @@ pattern; the forest trainer respects its structural invariants."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.ml.cv import cross_validate, metrics

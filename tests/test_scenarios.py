@@ -1,0 +1,68 @@
+"""Scenario library tests: registry integrity, seed injection, and that the
+named regimes actually express distinct failure mixes."""
+
+import dataclasses
+
+import pytest
+
+from repro.cluster.chaos import ChaosConfig
+from repro.cluster.scenarios import (SCENARIOS, WORKLOAD_SHAPES, get_scenario,
+                                     get_workload_shape, scenario_chaos,
+                                     workload_for_seed)
+
+EXPECTED = {"baseline", "bursty_tt", "dn_loss", "slot_degradation", "net_flap",
+            "rack_failure", "straggler_heavy", "kitchen_sink"}
+
+
+def test_registry_has_the_eight_named_scenarios():
+    assert EXPECTED <= set(SCENARIOS)
+    for sc in SCENARIOS.values():
+        assert sc.description
+        assert isinstance(sc.chaos, ChaosConfig)
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_branch_weights_are_a_valid_distribution(name):
+    c = SCENARIOS[name].chaos
+    mass = c.kill_tt + c.suspend_tt + c.kill_dn + c.net_slow + c.net_drop
+    assert 0.0 <= mass <= 1.0 + 1e-9          # residual mass = thread-kill
+    assert c.intensity > 0
+    assert c.mean_outage > 0
+    lo, hi = c.burst_size
+    assert 1 <= lo <= hi
+
+
+def test_scenarios_are_pairwise_distinct():
+    configs = [dataclasses.replace(sc.chaos, seed=0)
+               for sc in SCENARIOS.values()]
+    assert len({repr(c) for c in configs}) == len(configs)
+
+
+def test_baseline_matches_paper_default():
+    assert dataclasses.replace(SCENARIOS["baseline"].chaos, seed=0) == \
+        dataclasses.replace(ChaosConfig(), seed=0)
+
+
+def test_seed_injection_leaves_template_untouched():
+    c1 = scenario_chaos("bursty_tt", 11)
+    c2 = scenario_chaos("bursty_tt", 22)
+    assert c1.seed == 11 and c2.seed == 22
+    assert dataclasses.replace(c1, seed=0) == dataclasses.replace(c2, seed=0)
+    assert SCENARIOS["bursty_tt"].chaos.seed == ChaosConfig().seed
+
+
+def test_unknown_names_raise_with_known_list():
+    with pytest.raises(KeyError, match="baseline"):
+        get_scenario("nope")
+    with pytest.raises(KeyError, match="smoke"):
+        get_workload_shape("nope")
+
+
+def test_workload_shapes_registry():
+    assert {"default", "smoke"} <= set(WORKLOAD_SHAPES)
+    smoke = get_workload_shape("smoke")
+    default = get_workload_shape("default")
+    assert smoke.n_single < default.n_single     # smoke is genuinely small
+    w = workload_for_seed("smoke", 99)
+    assert w.seed == 99
+    assert WORKLOAD_SHAPES["smoke"].seed != 99   # template untouched

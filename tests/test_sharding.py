@@ -11,7 +11,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_arch, smoke_reduce, cell_supported
-from repro.launch.mesh import data_shards, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import arch_rules, batch_specs, build_cell
 from repro.parallel.axes import logical_to_spec, make_rules
 
@@ -21,7 +21,10 @@ def _mesh22():
     devices, so these run on a single-device host too."""
     if jax.device_count() >= 4:
         return jax.make_mesh((2, 2), ("data", "model"))
-    return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    try:
+        return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    except TypeError:   # jax<=0.4.37 signature: tuple of (name, size) pairs
+        return jax.sharding.AbstractMesh((("data", 2), ("model", 2)))
 
 
 def test_rules_resolution_basics():

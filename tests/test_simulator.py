@@ -1,16 +1,15 @@
 """Simulator + scheduler behaviour tests (unit + property-based)."""
 
-import random
-
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.cluster.chaos import ChaosConfig, ChaosInjector
+from repro.cluster.chaos import ChaosConfig
 from repro.cluster.experiment import (ExperimentConfig, compare, run_atlas,
                                       run_baseline)
-from repro.cluster.simulator import MACHINE_TYPES, Simulator
-from repro.cluster.telemetry import N_FEATURES, TelemetryTrace
+from repro.cluster.simulator import Simulator
+from repro.cluster.telemetry import N_FEATURES
 from repro.cluster.workload import WorkloadConfig, install, make_workload
 from repro.sched.base import BASELINES
 
