@@ -1,7 +1,7 @@
 # Used verbatim by .github/workflows/ci.yml.
 PY ?= python
 
-.PHONY: test lint sweep-smoke
+.PHONY: test lint sweep-smoke online-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -16,3 +16,10 @@ sweep-smoke:
 		--schedulers fifo,atlas-fifo --seeds 2 \
 		--scenarios baseline,bursty_tt --workloads smoke \
 		--out experiments
+
+# tiny broker load-gen run: exits non-zero unless the batched path shows
+# throughput and bit-parity with scalar scoring; stamps the broker numbers
+# into experiments/SWEEP.json when the smoke sweep already produced one
+online-smoke:
+	PYTHONPATH=src $(PY) -m repro.online.bench --smoke \
+		--out experiments --stamp-sweep experiments/SWEEP.json

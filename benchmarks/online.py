@@ -1,0 +1,38 @@
+"""Online broker benchmark: replay a fleet decision stream through the
+prediction broker (scalar vs closed-loop broker vs saturated flushes).
+
+Fast mode replays a smoke-cell stream; REPRO_BENCH_FULL=1 replays a default
+workload stream at fleet scale."""
+
+from __future__ import annotations
+
+from benchmarks.common import FULL, Timer, emit, save_json
+from repro.online.bench import run_bench
+
+
+def run() -> dict:
+    if FULL:
+        kw = dict(rows=40000, clients=16, workload="default",
+                  scenario="bursty_tt")
+    else:
+        kw = dict(rows=4000, clients=12, workload="smoke",
+                  scenario="bursty_tt")
+    with Timer() as t:
+        summary = run_bench(**kw)
+    s, b, f = summary["scalar"], summary["broker"], summary["saturated"]
+    emit("online/scalar", 1e6 / max(s["rows_per_s"], 1e-9),
+         f"rows_s={s['rows_per_s']:.0f};dispatches={s['dispatches']}")
+    emit("online/broker", 1e6 / max(b["rows_per_s"], 1e-9),
+         f"rows_s={b['rows_per_s']:.0f};dispatches={b['dispatches']};"
+         f"p50_ms={b['latency_ms']['p50']:.2f};"
+         f"p99_ms={b['latency_ms']['p99']:.2f}")
+    emit("online/saturated", 1e6 / max(f["rows_per_s"], 1e-9),
+         f"rows_s={f['rows_per_s']:.0f};speedup={summary['speedup']:.1f}x;"
+         f"dispatch_reduction={summary['dispatch_reduction']:.1f}x;"
+         f"parity={summary['parity']};total_s={t.s:.1f}")
+    save_json("online_broker", summary)
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -10,6 +10,7 @@ roofline/fault-tolerance benches.  Prints ``name,us_per_call,derived`` CSV.
   runtime_ft  elastic-trainer fault tolerance (ATLAS vs baseline)
   roofline    three-term roofline per dry-run cell (reads experiments/dryrun)
   sweep       fleet scenario sweep (schedulers x seeds x chaos scenarios)
+  online      prediction-broker serving bench (scalar vs batched flushes)
 
 Env: REPRO_BENCH_FULL=1 for full-size runs; default is CI-sized.
 Select sections: python -m benchmarks.run [section ...]
@@ -20,17 +21,18 @@ from __future__ import annotations
 import subprocess
 import sys
 
-SECTIONS = ("table3", "schedulers", "sweep", "heartbeat", "kernels",
+SECTIONS = ("table3", "schedulers", "sweep", "online", "heartbeat", "kernels",
             "runtime_ft", "roofline")
 
 
 def _run_section(name: str) -> None:
-    from benchmarks import (heartbeat, kernels, predictors, roofline,
+    from benchmarks import (heartbeat, kernels, online, predictors, roofline,
                             runtime_ft, schedulers, sweep)
     {
         "table3": predictors.run,
         "schedulers": schedulers.run,
         "sweep": sweep.run,
+        "online": online.run,
         "heartbeat": heartbeat.run,
         "kernels": kernels.run,
         "runtime_ft": runtime_ft.run,

@@ -21,3 +21,7 @@ Layers:
 """
 
 __version__ = "1.0.0"
+
+# Stamped into SWEEP.json / ONLINE.json so the perf trajectory across PRs is
+# readable from one artifact.  Bump per PR.
+PR_TAG = "PR4-online-broker"

@@ -32,6 +32,13 @@ class ExperimentConfig:
     n_speculative: int = 2
     retrain_every: float = 600.0
     hazard_noise: float = 0.55
+    min_samples: int = 150
+    # training-set cap; a small fixed cap also pins the train-batch shape so
+    # online retraining reuses one jitted program instead of recompiling
+    max_train: int = 20000
+    # drift-aware refresh (repro.online.drift) instead of the fixed clock
+    drift: bool = False
+    drift_check_every: float = 60.0
 
 
 def _new_sim(scheduler, cfg: ExperimentConfig, trace) -> Simulator:
@@ -53,10 +60,18 @@ def run_baseline(name: str, cfg: ExperimentConfig, *, with_trace=True):
 def run_atlas(name: str, cfg: ExperimentConfig,
               predictor: TaskPredictor | None = None):
     trace = TelemetryTrace()
+    refresher = None
+    if cfg.drift:
+        from repro.online.drift import OnlineRefresher
+        refresher = OnlineRefresher(retrain_every=cfg.retrain_every,
+                                    check_every=cfg.drift_check_every)
     sched = ATLASScheduler(
-        BASELINES[name](), predictor=predictor or TaskPredictor(algo=cfg.algo),
+        BASELINES[name](),
+        predictor=predictor or TaskPredictor(algo=cfg.algo,
+                                             min_samples=cfg.min_samples,
+                                             max_train=cfg.max_train),
         threshold=cfg.threshold, n_speculative=cfg.n_speculative,
-        retrain_every=cfg.retrain_every)
+        retrain_every=cfg.retrain_every, refresher=refresher)
     sim = _new_sim(sched, cfg, trace)
     metrics = sim.run()
     metrics["atlas"] = sched.stats()
@@ -130,7 +145,9 @@ def _matched_long_job_times(sim_a, sim_b, quantile: float = 0.75):
 def compare(name: str, cfg: ExperimentConfig) -> dict:
     """Full §5 protocol for one base scheduler.  Returns {base, atlas, deltas}."""
     base_metrics, train_trace, base_sim = run_baseline(name, cfg)
-    predictor = TaskPredictor(algo=cfg.algo, seed=cfg.seed)
+    predictor = TaskPredictor(algo=cfg.algo, seed=cfg.seed,
+                              min_samples=cfg.min_samples,
+                              max_train=cfg.max_train)
     predictor.fit(train_trace)
     atlas_metrics, _, atlas_sim = run_atlas(name, cfg, predictor)
     mt_base, mt_atlas = _matched_job_times(base_sim, atlas_sim)

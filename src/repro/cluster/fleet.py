@@ -29,12 +29,21 @@ Design points:
   runtime per worker, no fork-after-init hazards); ``thread`` and ``serial``
   executors exist for tests and debugging.
 
+* **Online serving (PR 4).**  ``--executor broker`` runs every ATLAS cell as a
+  client of one ``repro.online`` PredictionBroker: all p_success traffic is
+  flushed in deterministic lock-step rounds as single fused forest passes —
+  identical SWEEP cells, an order of magnitude fewer predictor dispatches
+  (reported under ``perf.broker``).  ``--registry DIR`` publishes each training
+  wave's models to a versioned ``ModelRegistry`` and ships *version ids* to the
+  ATLAS wave instead of raw trace arrays.
+
 CLI:
 
   python -m repro.cluster.fleet \
       --schedulers fifo,atlas-fifo --seeds 4 \
       --scenarios baseline,bursty_tt,dn_loss [--workloads default] \
-      [--executor process|thread|serial] [--workers N] [--out experiments]
+      [--executor process|thread|serial|broker] [--workers N] \
+      [--registry DIR] [--out experiments]
 """
 
 from __future__ import annotations
@@ -97,6 +106,8 @@ class SweepSpec:
     threshold: float = 0.5
     n_speculative: int = 2
     heartbeat_interval: float = 600.0
+    min_samples: int = 150
+    max_train: int = 20000
 
     def seed_indices(self) -> tuple:
         if isinstance(self.seeds, int):
@@ -150,7 +161,8 @@ def cell_config(spec: SweepSpec, cell: CellSpec) -> ExperimentConfig:
         seed=cell_seed("sim", *env),
         heartbeat_interval=spec.heartbeat_interval,
         algo=spec.algo, threshold=spec.threshold,
-        n_speculative=spec.n_speculative)
+        n_speculative=spec.n_speculative, min_samples=spec.min_samples,
+        max_train=spec.max_train)
 
 
 # ---------------------------------------------------------------------------
@@ -162,25 +174,110 @@ def _numeric_metrics(metrics: dict) -> dict:
             if isinstance(v, (int, float))}
 
 
+def _train_model_name(cell: CellSpec) -> str:
+    """Registry entry for a training run: one model per (base, env)."""
+    return (f"{cell.scheduler}/{cell.scenario}/{cell.workload}"
+            f"/s{cell.seed_index}")
+
+
 def _run_base_cell(args):
-    """Wave 1: a base-scheduler cell.  Returns its metrics plus — when some
-    ATLAS cell needs this (base, env) as a training run — the trace datasets."""
-    cell, cfg, want_trace = args
+    """Wave 1: a base-scheduler cell.  When some ATLAS cell needs this
+    (base, env) as a training run, the trained state ships either as raw trace
+    datasets or — with a registry — as a published model *version*."""
+    cell, cfg, want_trace, registry_dir = args
     metrics, trace, _ = run_scheduler(cell.scheduler, cfg,
                                       with_trace=want_trace)
-    datasets = trace.datasets() if want_trace else None
-    return cell, _numeric_metrics(metrics), metrics["sched_stats"], datasets
+    payload = None
+    if want_trace:
+        datasets = trace.datasets()
+        if registry_dir is not None:
+            from repro.online.registry import ModelRegistry
+            predictor = TaskPredictor(algo=cfg.algo, seed=cfg.seed,
+                                      min_samples=cfg.min_samples,
+                                      max_train=cfg.max_train)
+            predictor.fit_datasets(*datasets)
+            name = _train_model_name(cell)
+            version = ModelRegistry(registry_dir).publish(
+                name, predictor.snapshot(),
+                meta={"cell": cell.cell_id, "role": "train"})
+            payload = ("registry", name, version)
+        else:
+            payload = ("datasets", datasets)
+    return cell, _numeric_metrics(metrics), metrics["sched_stats"], payload
+
+
+def _load_predictor(predictor: TaskPredictor, payload, registry_dir):
+    """Initialise a wave-2 predictor from its shipped training payload."""
+    if payload is None:
+        return predictor
+    kind = payload[0]
+    if kind == "datasets":
+        predictor.fit_datasets(*payload[1])
+    elif kind == "registry":
+        from repro.online.registry import ModelRegistry
+        _, name, version = payload
+        predictor.load_snapshot(
+            ModelRegistry(registry_dir).load(name, version))
+    else:
+        raise ValueError(f"unknown training payload {kind!r}")
+    return predictor
 
 
 def _run_atlas_cell(args):
-    """Wave 2: an ATLAS cell; fits the predictor from the shipped training
-    datasets (one simulated training run shared across the matrix)."""
-    cell, cfg, datasets = args
-    predictor = TaskPredictor(algo=cfg.algo, seed=cfg.seed)
-    if datasets is not None:
-        predictor.fit_datasets(*datasets)
+    """Wave 2: an ATLAS cell; the predictor comes pre-trained from the shipped
+    payload (one simulated training run shared across the matrix)."""
+    cell, cfg, payload, registry_dir = args
+    predictor = _load_predictor(
+        TaskPredictor(algo=cfg.algo, seed=cfg.seed,
+                      min_samples=cfg.min_samples, max_train=cfg.max_train),
+        payload, registry_dir)
     metrics, _, _ = run_scheduler(cell.scheduler, cfg, predictor)
     return cell, _numeric_metrics(metrics), metrics["sched_stats"]
+
+
+def _run_atlas_wave_brokered(wave2, registry_dir, workers=None):
+    """Run every ATLAS cell concurrently as a client of one shared
+    PredictionBroker.  Clients are registered before any thread starts so the
+    lock-step rounds (and hence dispatch counts) are a pure function of the
+    decision streams, not of thread scheduling.  Returns (records, perf)."""
+    import concurrent.futures as cf
+
+    from repro.online.broker import BrokerPredictor, PredictionBroker
+
+    broker = PredictionBroker(impl="numpy")
+    broker.add_clients(len(wave2))
+    predictors = []
+
+    def run_one(args):
+        cell, cfg, payload = args
+        try:  # broker.done() exactly once, or the barrier waits forever
+            predictor = _load_predictor(
+                BrokerPredictor(broker=broker, algo=cfg.algo, seed=cfg.seed,
+                                min_samples=cfg.min_samples,
+                                max_train=cfg.max_train),
+                payload, registry_dir)
+            predictors.append(predictor)
+            metrics, _, _ = run_scheduler(cell.scheduler, cfg, predictor)
+        finally:
+            broker.done()
+        return cell, _numeric_metrics(metrics), metrics["sched_stats"]
+
+    # every cell MUST get a thread: all clients are registered up front, and a
+    # round only flushes once every registered client has queued — capping
+    # max_workers below len(wave2) would leave unstarted cells registered but
+    # silent, deadlocking the running ones inside broker.submit
+    with cf.ThreadPoolExecutor(max_workers=max(len(wave2), 1)) as pool:
+        out = list(pool.map(run_one, wave2))
+    demand_calls = sum(p.n_demand_calls for p in predictors)
+    demand_rows = sum(p.n_demand_rows for p in predictors)
+    perf = {"broker": {
+        **broker.stats(),
+        "demand_calls": demand_calls,
+        "demand_rows": demand_rows,
+        "dispatch_reduction": round(
+            demand_calls / max(broker.n_dispatches, 1), 2),
+    }}
+    return out, perf
 
 
 class _SerialExecutor:
@@ -195,7 +292,9 @@ class _SerialExecutor:
 
 
 def _make_executor(kind: str, workers: int | None):
-    if kind == "serial":
+    if kind in ("serial", "broker"):
+        # "broker" batches only the ATLAS wave (threads sharing one broker);
+        # wave 1 runs serially in-process so training payloads stay local
         return _SerialExecutor()
     if kind == "thread":
         return concurrent.futures.ThreadPoolExecutor(max_workers=workers)
@@ -205,7 +304,8 @@ def _make_executor(kind: str, workers: int | None):
         ctx = multiprocessing.get_context("spawn")
         return concurrent.futures.ProcessPoolExecutor(
             max_workers=workers or os.cpu_count(), mp_context=ctx)
-    raise ValueError(f"unknown executor {kind!r} (process|thread|serial)")
+    raise ValueError(
+        f"unknown executor {kind!r} (process|thread|serial|broker)")
 
 
 # ---------------------------------------------------------------------------
@@ -213,14 +313,19 @@ def _make_executor(kind: str, workers: int | None):
 # ---------------------------------------------------------------------------
 
 def run_sweep(spec: SweepSpec, *, executor: str = "process",
-              workers: int | None = None, log=print) -> dict:
+              workers: int | None = None, registry: str | None = None,
+              log=print) -> dict:
     """Execute the full matrix; returns the SWEEP result dict (see sweep_json).
 
     Two waves: (1) all base-scheduler cells plus any training-only runs ATLAS
     cells require, (2) all ATLAS cells with pre-trained predictors.  Cells
     within a wave run in parallel; results are keyed by cell id so completion
     order never affects the output.
-    """
+
+    ``executor="broker"`` serves wave 2 through one shared PredictionBroker
+    (identical cells, far fewer predictor dispatches — see ``perf.broker``).
+    ``registry=DIR`` ships model *versions* through a ModelRegistry instead of
+    raw trace arrays (forest-family algos)."""
     t0 = time.perf_counter()
     cells = expand(spec)
     base_cells = [c for c in cells if atlas_base_name(c.scheduler) is None]
@@ -236,41 +341,58 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
                    for base, sc, wl, si in train_only]
 
     wave1 = [(c, cell_config(spec, c), (c.scheduler,) + c.env_key
-              in needed_train) for c in base_cells]
-    wave1 += [(c, cell_config(spec, c), True) for c in train_cells]
+              in needed_train, registry) for c in base_cells]
+    wave1 += [(c, cell_config(spec, c), True, registry) for c in train_cells]
 
     log(f"[fleet] {len(cells)} cells "
         f"({len(base_cells)} base + {len(atlas_cells)} atlas), "
-        f"{len(train_cells)} extra training runs, executor={executor}")
+        f"{len(train_cells)} extra training runs, executor={executor}"
+        + (f", registry={registry}" if registry else ""))
 
     results: dict[str, dict] = {}
     train_data: dict[tuple, object] = {}
+    perf: dict = {}
     with _make_executor(executor, workers) as pool:
-        for cell, metrics, stats, datasets in pool.map(_run_base_cell, wave1):
-            if datasets is not None:
-                train_data[(cell.scheduler,) + cell.env_key] = datasets
+        for cell, metrics, stats, payload in pool.map(_run_base_cell, wave1):
+            if payload is not None:
+                train_data[(cell.scheduler,) + cell.env_key] = payload
             results[cell.cell_id] = _cell_record(cell, metrics, stats)
         log(f"[fleet] wave 1 done: {len(wave1)} runs, "
-            f"{len(train_data)} training traces "
+            f"{len(train_data)} training payloads "
             f"({time.perf_counter() - t0:.1f}s)")
 
         wave2 = [(c, cell_config(spec, c),
                   train_data.get((atlas_base_name(c.scheduler),) + c.env_key))
                  for c in atlas_cells]
-        for cell, metrics, stats in pool.map(_run_atlas_cell, wave2):
+        if executor == "broker":
+            wave2_out, perf = _run_atlas_wave_brokered(wave2, registry,
+                                                       workers)
+        else:
+            wave2_out = pool.map(_run_atlas_cell,
+                                 [w + (registry,) for w in wave2])
+        for cell, metrics, stats in wave2_out:
             results[cell.cell_id] = _cell_record(cell, metrics, stats)
     log(f"[fleet] wave 2 done: {len(atlas_cells)} atlas runs "
         f"({time.perf_counter() - t0:.1f}s total)")
+    if perf.get("broker"):
+        b = perf["broker"]
+        log(f"[fleet] broker: {b['demand_calls']} demand calls -> "
+            f"{b['dispatches']} dispatches "
+            f"({b['dispatch_reduction']}x reduction, "
+            f"{b['flushes']} flushes, max batch {b['max_flush_rows']} rows)")
 
     # keep only requested cells (training-only runs served their purpose)
     wanted = {c.cell_id for c in cells}
     records = [results[cid] for cid in sorted(wanted)]
     aggregates = aggregate(records)
+    import repro
     return {
         "spec": spec.to_json(),
+        "provenance": {"pr": repro.PR_TAG},
         "cells": records,
         "aggregates": aggregates,
         "rankings": rank(aggregates),
+        **({"perf": perf} if perf else {}),
     }
 
 
@@ -371,6 +493,14 @@ def sweep_markdown(result: dict) -> str:
                  f"seeds: {len(spec['seeds'])} — "
                  f"scenarios: {', '.join(spec['scenarios'])} — "
                  f"workloads: {', '.join(spec['workloads'])}")
+    pr = result.get("provenance", {}).get("pr")
+    if pr:
+        lines += ["", f"Produced by: {pr}"]
+    broker = result.get("perf", {}).get("broker")
+    if broker:
+        lines += ["", f"Broker: {broker['demand_calls']} demand calls -> "
+                      f"{broker['dispatches']} dispatches "
+                      f"({broker['dispatch_reduction']}x reduction)"]
     header = ("| scheduler | failed tasks % | failed jobs % | job time (s) "
               "| sim time (s) |")
     sep = "|---|---|---|---|---|"
@@ -429,9 +559,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--workloads", default="default",
                     help="comma list: " + ", ".join(sorted(WORKLOAD_SHAPES)))
     ap.add_argument("--algo", default="R.F.")
+    ap.add_argument("--min-samples", type=int, default=150,
+                    help="min labelled rows before a model trains")
     ap.add_argument("--executor", default="process",
-                    choices=("process", "thread", "serial"))
+                    choices=("process", "thread", "serial", "broker"))
     ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--registry", default=None,
+                    help="model-registry dir: ship trained model versions "
+                         "to ATLAS cells instead of raw trace arrays")
     ap.add_argument("--out", default="experiments",
                     help="directory for SWEEP.json + SWEEP.md")
     ap.add_argument("--list-scenarios", action="store_true")
@@ -451,13 +586,14 @@ def main(argv=None) -> int:
         seeds=args.seeds,
         scenarios=scenarios,
         workloads=tuple(args.workloads.split(",")),
-        algo=args.algo)
+        algo=args.algo, min_samples=args.min_samples)
     try:
         expand(spec)
     except KeyError as e:
         print(f"error: {e.args[0]}", file=sys.stderr)
         return 2
-    result = run_sweep(spec, executor=args.executor, workers=args.workers)
+    result = run_sweep(spec, executor=args.executor, workers=args.workers,
+                       registry=args.registry)
     jp, mp = write_outputs(result, args.out)
     sys.stdout.write(sweep_markdown(result))
     print(f"[fleet] wrote {jp} and {mp}")

@@ -29,7 +29,7 @@ class ATLASScheduler(Scheduler):
 
     def __init__(self, base: Scheduler, *, predictor: TaskPredictor | None = None,
                  threshold: float = 0.5, n_speculative: int = 2,
-                 retrain_every: float = 600.0,
+                 retrain_every: float = 600.0, refresher=None,
                  heartbeat: HeartbeatController | None = None,
                  max_penalty_box: int = 512, penalty_timeout: float = 150.0):
         super().__init__()
@@ -39,6 +39,11 @@ class ATLASScheduler(Scheduler):
         self.threshold = threshold
         self.n_speculative = n_speculative
         self.retrain_every = retrain_every
+        # optional drift-aware refresh loop (repro.online.drift): retrains on
+        # feature/score drift instead of only the fixed §5.1 clock
+        self.refresher = refresher
+        if refresher is not None:
+            refresher.bind_predictor(self.predictor)
         self.hb = heartbeat or HeartbeatController()
         self.penalty_timeout = penalty_timeout
         self.penalty_box: deque = deque(maxlen=max_penalty_box)
@@ -55,11 +60,17 @@ class ATLASScheduler(Scheduler):
         self.sim = sim
         self.base.bind(sim)
         self.base.launch = self._atlas_launch        # intercept Algorithm-1 gate
-        if self.retrain_every > 0:
+        if self.refresher is not None:
+            sim._push(self.refresher.check_every, EV_RETRAIN, None)
+        elif self.retrain_every > 0:
             sim._push(self.retrain_every, EV_RETRAIN, None)
 
     # ------------------------------------------------------------------ hooks
     def on_tick(self):
+        # broker hook: snapshot the schedulable set so every p_success raised
+        # during this tick can be served from one primed batch
+        self.predictor.begin_tick(
+            self.sim, extra_keys=[key for key, _ in self.penalty_box])
         self.base.schedule()
         self._drain_penalty_box()
         self.base.speculate_stragglers()
@@ -69,6 +80,14 @@ class ATLASScheduler(Scheduler):
         self.base.on_heartbeat(node)
 
     def on_retrain(self):
+        if self.refresher is not None:
+            # drift-aware path: check often, retrain when the monitor (or the
+            # staleness clock it keeps) says the environment moved
+            if self.sim.trace is not None:
+                self.refresher.step(self.sim)
+            self.sim._push(self.sim.now + self.refresher.check_every,
+                           EV_RETRAIN, None)
+            return
         if self.sim.trace is not None:
             self.predictor.fit(self.sim.trace)
         self.sim._push(self.sim.now + self.retrain_every, EV_RETRAIN, None)
@@ -206,4 +225,10 @@ class ATLASScheduler(Scheduler):
             "dead_probes": self.n_dead_probes,
             "hb_adjustments": self.hb.adjustments,
             "model_fits": self.predictor.fits,
+            # NOTE: dispatch counters live on the predictor/broker, not here —
+            # cell stats must be identical whichever batching executor ran them
+            **({"refreshes": self.refresher.refreshes,
+                "promotions": self.refresher.promotions,
+                "rollbacks": self.refresher.rollbacks}
+               if self.refresher is not None else {}),
         }

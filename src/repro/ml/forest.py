@@ -32,11 +32,22 @@ class ForestParams:
 
 
 def make_bins(X: np.ndarray, n_bins: int) -> np.ndarray:
-    """Per-feature candidate thresholds from quantiles: (F, Q)."""
+    """Per-feature candidate thresholds from quantiles: (F, Q).
+
+    Quantiles of constant / low-cardinality features repeat, and every repeat
+    is the same zero-information candidate split occupying a slot in the
+    (feature, quantile) candidate grid.  Each feature row keeps only its
+    distinct thresholds (ascending); the tail is padded with +inf sentinels
+    whose ``x > thr`` bits are identically False — a degenerate all-right
+    split with exactly zero gain, so argmax never prefers one over a real
+    candidate (ties resolve to the lowest flat index, which is finite)."""
     qs = np.linspace(0.05, 0.95, n_bins)
     thr = np.quantile(X, qs, axis=0).T.astype(np.float32)      # (F, Q)
-    # de-duplicate constant features (identical quantiles give zero-gain splits)
-    return thr
+    out = np.full_like(thr, np.inf)
+    for f in range(thr.shape[0]):
+        uniq = np.unique(thr[f])                               # sorted, distinct
+        out[f, :uniq.size] = uniq
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("n_leaves", "criterion"))
@@ -157,6 +168,39 @@ def fit_oblivious_forest(X: np.ndarray, y: np.ndarray, *, n_trees: int = 24,
 SMALL_BATCH = 64
 
 
+def _mean_over_trees(vals: np.ndarray) -> np.ndarray:
+    """Mean over axis 1 with a fixed, batch-shape-independent accumulation order.
+
+    ``np.mean`` re-associates its pairwise reduction depending on the array
+    shape, so the same row can round differently inside different batches
+    (observed 1-2 ulp).  The online broker memoises probabilities and must
+    return bit-identical values however requests are batched, so the tree sum
+    is accumulated strictly in tree order — per-row arithmetic that cannot see
+    the batch it rides in."""
+    acc = vals[:, 0].astype(np.float32)                        # always a copy
+    for t in range(1, vals.shape[1]):
+        acc += vals[:, t]
+    return acc / np.float32(vals.shape[1])
+
+
+def _leaf_votes_np(fi, th, lv, x: np.ndarray) -> np.ndarray:
+    """Per-(row, tree) leaf values for an oblivious forest: (B, T) float32.
+
+    Bit patterns -> leaf indices go through a float32 dot with the power-of-two
+    weights (exact for 0/1 bits and D <= 24), which is a single BLAS call
+    instead of an int64 broadcast-multiply-reduce — this is the broker's
+    saturated-flush floor, so per-row constants matter."""
+    B = x.shape[0]
+    T, D = fi.shape
+    g = np.take(x, fi.reshape(-1), axis=1)                      # (B, T*D)
+    bits = (g > th.reshape(1, T * D).astype(np.float32))
+    weights = (1 << np.arange(D - 1, -1, -1)).astype(np.float32)
+    leaf_idx = (bits.reshape(B * T, D).astype(np.float32) @ weights) \
+        .astype(np.intp).reshape(B, T)
+    flat_idx = leaf_idx + (np.arange(T) * lv.shape[1])[None, :]
+    return np.take(lv.astype(np.float32).reshape(-1), flat_idx)
+
+
 def forest_predict_np(params: ForestParams, X: np.ndarray,
                       tree_slice: slice | None = None) -> np.ndarray:
     """Pure-numpy mirror of ``kernels.ref.forest_infer_ref`` for tiny batches."""
@@ -164,14 +208,69 @@ def forest_predict_np(params: ForestParams, X: np.ndarray,
     fi, th, lv = params.feat_idx, params.thresholds, params.leaves
     if tree_slice is not None:
         fi, th, lv = fi[tree_slice], th[tree_slice], lv[tree_slice]
-    B = x.shape[0]
-    T, D = fi.shape
-    gathered = x[:, fi.reshape(-1)].reshape(B, T, D)
-    bits = (gathered > th[None].astype(np.float32)).astype(np.int64)
-    weights = 2 ** np.arange(D - 1, -1, -1)
-    leaf_idx = (bits * weights[None, None, :]).sum(-1)          # (B, T)
-    vals = lv.astype(np.float32)[np.arange(T)[None, :], leaf_idx]  # (B, T)
-    return vals.mean(axis=1)
+    return _mean_over_trees(_leaf_votes_np(fi, th, lv, x))
+
+
+def forest_predict_grouped(groups) -> tuple[list, int]:
+    """One fused inference pass over many (ForestParams, X) groups.
+
+    The serving broker flushes every queued prediction request — possibly from
+    many independently trained predictors — as a single vectorised pass: all
+    rows are gathered / compared / leaf-indexed against the stacked forest
+    once, then each row block averages only its own model's tree block.
+    Because the tree mean accumulates in a fixed order (``_mean_over_trees``)
+    and every other step is per-row, each row's probability is bit-identical
+    to ``forest_predict_np(its_params, its_rows)`` regardless of which other
+    groups share the flush.
+
+    Returns ``(outs, n_passes)``: one score array per group, and the number of
+    fused passes actually issued (one per distinct (T, D, 2^D) shape).  Groups
+    that reference the *same* ForestParams object share one tree block, so a
+    saturated flush of many requests against one model costs one model's worth
+    of trees, not one per request.
+
+    Trade-off: within a shape bucket every row is scored against every
+    model's trees (O(ΣB x ΣT)) and the off-model blocks are discarded.  At
+    broker flush sizes (tens of rows, tens of models) this one vectorised
+    pass is cheaper than per-model numpy calls, whose fixed per-call overhead
+    dominates; block-diagonal evaluation only starts winning when rows x
+    models grows far past that regime (see ROADMAP open items)."""
+    outs: list = [None] * len(groups)
+    by_params: dict[int, list[int]] = {}      # id(params) -> group indices
+    params_of: dict[int, ForestParams] = {}
+    for i, (params, X) in enumerate(groups):
+        if X.shape[0] == 0:
+            outs[i] = np.zeros(0, np.float32)
+            continue
+        by_params.setdefault(id(params), []).append(i)
+        params_of[id(params)] = params
+    shape_buckets: dict[tuple, list[int]] = {}
+    for pid, p in params_of.items():
+        shape_buckets.setdefault(
+            (p.feat_idx.shape, p.leaves.shape), []).append(pid)
+    n_passes = 0
+    for pids in shape_buckets.values():
+        n_passes += 1
+        fi = np.concatenate([params_of[p].feat_idx for p in pids])
+        th = np.concatenate([params_of[p].thresholds for p in pids])
+        lv = np.concatenate([params_of[p].leaves for p in pids])
+        x = np.concatenate([np.asarray(groups[i][1], np.float32)
+                            for p in pids for i in by_params[p]])
+        votes = _leaf_votes_np(fi, th, lv, x)                  # (ΣB, ΣT)
+        T = params_of[pids[0]].feat_idx.shape[0]
+        r = 0
+        for j, p in enumerate(pids):
+            rows = sum(groups[i][1].shape[0] for i in by_params[p])
+            # one fixed-order mean per model block (per-row arithmetic: the
+            # result is identical however the block is later sliced up)
+            block = _mean_over_trees(votes[r:r + rows, j * T:(j + 1) * T])
+            r += rows
+            o = 0
+            for i in by_params[p]:
+                b = groups[i][1].shape[0]
+                outs[i] = block[o:o + b]
+                o += b
+    return outs, n_passes
 
 
 def forest_predict(params: ForestParams, X: np.ndarray, *, impl: str | None = None,

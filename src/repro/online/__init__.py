@@ -1,0 +1,16 @@
+"""repro.online — serving-scale predictor lifecycle for ATLAS.
+
+  broker     batched prediction broker: tick-primed memo + cross-cell
+             barrier-flush batching, bit-identical to per-decision scoring
+  registry   versioned, atomic ForestParams store (publish/promote/rollback)
+  drift      sliding-window drift monitor + incremental refresh control loop
+  bench      load-generator CLI: python -m repro.online.bench
+"""
+
+from repro.online.broker import (BrokerPredictor, PredictionBroker,
+                                 score_groups)
+from repro.online.drift import DriftMonitor, OnlineRefresher
+from repro.online.registry import ModelRegistry
+
+__all__ = ["BrokerPredictor", "PredictionBroker", "score_groups",
+           "DriftMonitor", "OnlineRefresher", "ModelRegistry"]

@@ -1,0 +1,371 @@
+"""Load generator for the prediction broker: replay fleet decision streams.
+
+Builds a decision stream (the launch-time feature rows a fleet cell actually
+raised), trains the predictor on it, then serves the stream three ways:
+
+  scalar     the per-decision path — one model dispatch per request
+  broker     closed loop: N concurrent clients through one PredictionBroker —
+             lock-step rounds fused into single passes; measures per-request
+             latency percentiles and the dispatch reduction
+  saturated  open loop: the stream arrives faster than flushes drain, so the
+             queue depth fills every flush — the broker's peak batched
+             throughput (this is the ≥10x-vs-scalar number)
+
+Row-level outputs are compared bit-for-bit across all three modes
+(``impl="numpy"``), so the bench doubles as a live parity check.
+
+  python -m repro.online.bench [--rows 6000] [--clients 12] [--workload smoke]
+      [--scenario bursty_tt] [--impl numpy|auto|xla|interpret] [--rate R]
+      [--out experiments] [--stamp-sweep [PATH]] [--smoke]
+
+``--rate`` paces each client (requests/s of wall time, 0 = flat out).
+``--stamp-sweep`` merges the summary into SWEEP.json / SWEEP.md (the cross-PR
+perf trajectory artifact).  Exit status is non-zero when the batched run shows
+no throughput or parity breaks — ``make online-smoke`` gates CI on this."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import threading
+import time
+
+import numpy as np
+
+import repro
+from repro.core.predictor import TaskPredictor
+from repro.online.broker import PredictionBroker
+
+# deterministic request-size mix mimicking the scheduler's demand: mostly
+# single-proposal p_success rows, periodically a candidate-set p_success_nodes
+REQUEST_SIZES = (1, 1, 1, 2, 1, 1, 13, 1, 1, 4)
+
+
+# ---------------------------------------------------------------------------
+# Stream construction
+# ---------------------------------------------------------------------------
+
+def build_stream(workload: str = "smoke", scenario: str = "bursty_tt",
+                 seed: int = 0, min_rows: int = 2000):
+    """(predictor, [(kind, X_request)]) from one base-scheduler fleet cell.
+
+    The trace's launch-time feature rows ARE the decision stream ATLAS would
+    have scored; they are tiled to ``min_rows`` and cut into requests with the
+    REQUEST_SIZES mix.  Falls back to a synthetic stream when the cell's trace
+    can't train (tiny workloads with too few outcomes of one class)."""
+    from repro.cluster.experiment import ExperimentConfig, run_scheduler
+    from repro.cluster.fleet import cell_seed
+    from repro.cluster.scenarios import scenario_chaos, workload_for_seed
+
+    env = (scenario, workload, seed)
+    cfg = ExperimentConfig(
+        workload=workload_for_seed(workload, cell_seed("workload", *env)),
+        chaos=scenario_chaos(scenario, cell_seed("chaos", *env)),
+        seed=cell_seed("sim", *env), min_samples=32)
+    _, trace, _ = run_scheduler("fifo", cfg, with_trace=True)
+    (mx, my), (rx, ry) = trace.datasets()
+    predictor = TaskPredictor(algo="R.F.", min_samples=32, seed=0)
+    predictor.fit_datasets((mx, my), (rx, ry))
+
+    rows = [("map", x) for x in mx] + [("reduce", x) for x in rx]
+    rows = [(k, x) for k, x in rows
+            if predictor.model_for_kind(k) is not None]
+    if not rows:  # untrained fallback: synthetic decision stream
+        rng = np.random.RandomState(seed)
+        X = rng.rand(512, mx.shape[1] if mx.size else 22).astype(np.float32)
+        y = (rng.rand(512) < 0.4).astype(np.float32)
+        predictor.fit_datasets((X, y), (X, y))
+        rows = [("map", x) for x in X]
+
+    while len(rows) < min_rows:
+        rows = rows + rows
+    rows = rows[:min_rows]
+
+    requests, i, s = [], 0, 0
+    while i < len(rows):
+        size = REQUEST_SIZES[s % len(REQUEST_SIZES)]
+        chunk = rows[i:i + size]
+        i += size
+        s += 1
+        # a request is single-kind, like p_success_nodes
+        kind = chunk[0][0]
+        X = np.stack([x for k, x in chunk if k == kind])
+        requests.append((kind, X))
+        rest = [(k, x) for k, x in chunk if k != kind]
+        if rest:
+            requests.append((rest[0][0], np.stack([x for _, x in rest])))
+    return predictor, requests
+
+
+# ---------------------------------------------------------------------------
+# Serving modes
+# ---------------------------------------------------------------------------
+
+def run_scalar(predictor: TaskPredictor, requests) -> dict:
+    """The un-brokered baseline, timed at both granularities:
+
+    * per request — today's ``p_success`` / ``p_success_nodes`` call pattern
+      (one dispatch per call), and
+    * per decision — one dispatch per scored row, the paper's per-decision
+      evaluation (each row of a candidate set is one predicted placement).
+    """
+    d0, r0 = predictor.n_dispatches, predictor.n_rows_scored
+    outs = []
+    t0 = time.perf_counter()
+    for kind, X in requests:
+        outs.append(predictor.predict_batch(kind, X))
+    dt = time.perf_counter() - t0
+    rows = predictor.n_rows_scored - r0
+    t0 = time.perf_counter()
+    for kind, X in requests:
+        for i in range(X.shape[0]):
+            predictor.predict_batch(kind, X[i:i + 1])
+    dt_rows = time.perf_counter() - t0
+    return {"rows": rows, "requests": len(requests), "seconds": dt,
+            "rows_per_s": rows / max(dt, 1e-9),
+            "per_decision_rows_per_s": rows / max(dt_rows, 1e-9),
+            "dispatches": predictor.n_dispatches - d0 - rows,
+            "outputs": outs}
+
+
+def run_broker(predictor: TaskPredictor, requests, *, clients: int = 12,
+               impl: str = "numpy", rate: float = 0.0) -> dict:
+    """Concurrent clients replaying shards of the stream through one broker."""
+    broker = PredictionBroker(impl=impl)
+    shards = [list(range(c, len(requests), clients)) for c in range(clients)]
+    shards = [s for s in shards if s]
+    broker.add_clients(len(shards))
+    outs: list = [None] * len(requests)
+    lat: list = []
+    lat_lock = threading.Lock()
+    errors: list = []
+
+    def client(idxs):
+        my_lat = []
+        try:
+            for qi in idxs:
+                kind, X = requests[qi]
+                if rate > 0:
+                    time.sleep(1.0 / rate)
+                model = predictor.model_for_kind(kind)
+                t0 = time.perf_counter()
+                (out,) = broker.submit([(model, X)])
+                my_lat.append(time.perf_counter() - t0)
+                outs[qi] = out
+        except Exception as e:                       # pragma: no cover
+            errors.append(e)
+        finally:
+            broker.done()
+            with lat_lock:
+                lat.extend(my_lat)
+
+    threads = [threading.Thread(target=client, args=(sh,))
+               for sh in shards]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    lat.sort()
+
+    def pct(q):
+        return lat[min(int(q * len(lat)), len(lat) - 1)] * 1e3 if lat else 0.0
+
+    s = broker.stats()
+    return {"rows": s["rows"], "requests": s["requests"], "seconds": dt,
+            "rows_per_s": s["rows"] / max(dt, 1e-9),
+            "dispatches": s["dispatches"], "flushes": s["flushes"],
+            "max_flush_rows": s["max_flush_rows"],
+            "clients": len(shards), "impl": impl,
+            "latency_ms": {"p50": pct(0.50), "p95": pct(0.95),
+                           "p99": pct(0.99)},
+            "outputs": outs}
+
+
+def run_saturated(predictor: TaskPredictor, requests,
+                  *, impl: str = "numpy", batch_rows: int = 8192) -> dict:
+    """Open-loop saturation: requests arrive faster than flushes drain, so
+    every flush scores a full queue.  Replays the stream through the broker's
+    flush path (``score_groups``) at that depth — peak batched throughput."""
+    from repro.online.broker import score_groups
+    chunks, cur, rows = [], [], 0
+    for kind, X in requests:
+        cur.append((predictor.model_for_kind(kind), X))
+        rows += X.shape[0]
+        if rows >= batch_rows:
+            chunks.append(cur)
+            cur, rows = [], 0
+    if cur:
+        chunks.append(cur)
+    outs, dispatches, total = [], 0, 0
+    t0 = time.perf_counter()
+    for chunk in chunks:
+        o, n = score_groups(chunk, impl=impl)
+        outs.extend(o)
+        dispatches += n
+        total += sum(X.shape[0] for _, X in chunk)
+    dt = time.perf_counter() - t0
+    return {"rows": total, "requests": len(requests), "seconds": dt,
+            "rows_per_s": total / max(dt, 1e-9), "dispatches": dispatches,
+            "flushes": len(chunks), "batch_rows": batch_rows,
+            "outputs": outs}
+
+
+def _parity(scalar: dict, *others) -> bool:
+    for mode in others:
+        for a, b in zip(scalar["outputs"], mode["outputs"]):
+            if b is None or not np.array_equal(a, b):
+                return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Reporting
+# ---------------------------------------------------------------------------
+
+def summarize(scalar: dict, broker: dict, saturated: dict,
+              parity: bool | None) -> dict:
+    strip = lambda d: {k: v for k, v in d.items() if k != "outputs"}  # noqa: E731
+    return {
+        "pr": repro.PR_TAG,
+        "scalar": strip(scalar),
+        "broker": strip(broker),
+        "saturated": strip(saturated),
+        "speedup": saturated["rows_per_s"] / max(scalar["rows_per_s"], 1e-9),
+        "speedup_vs_per_decision": saturated["rows_per_s"]
+        / max(scalar["per_decision_rows_per_s"], 1e-9),
+        "dispatch_reduction": scalar["dispatches"]
+        / max(broker["dispatches"], 1),
+        "parity": parity,
+    }
+
+
+def stamp_sweep(summary: dict, sweep_json_path) -> bool:
+    """Merge the broker numbers into SWEEP.json + SWEEP.md so the perf
+    trajectory across PRs lives in one artifact."""
+    jp = pathlib.Path(sweep_json_path)
+    if not jp.exists():
+        return False
+    obj = json.loads(jp.read_text())
+    perf = obj.setdefault("perf", {})
+    perf["online_bench"] = {
+        "pr": summary["pr"],
+        "batched_rows_per_s": round(summary["saturated"]["rows_per_s"], 1),
+        "broker_rows_per_s": round(summary["broker"]["rows_per_s"], 1),
+        "scalar_rows_per_s": round(summary["scalar"]["rows_per_s"], 1),
+        "speedup": round(summary["speedup"], 2),
+        "dispatch_reduction": round(summary["dispatch_reduction"], 2),
+        "latency_ms": {k: round(v, 3)
+                       for k, v in summary["broker"]["latency_ms"].items()},
+        "parity": summary["parity"],
+    }
+    jp.write_text(json.dumps(obj, indent=2, sort_keys=True) + "\n")
+    mp = jp.with_name("SWEEP.md")
+    if mp.exists():
+        b = perf["online_bench"]
+        # re-stamping replaces the previous broker section, never appends a
+        # second one (the section is always the trailing block we wrote)
+        md = mp.read_text()
+        cut = md.find("\n## online broker (")
+        if cut != -1:
+            md = md[:cut]
+        mp.write_text(md.rstrip("\n") + "\n\n"
+                      f"## online broker ({summary['pr']})\n\n"
+                      f"| scalar rows/s | batched rows/s | speedup "
+                      f"| dispatch reduction | p50 ms | p99 ms | parity |\n"
+                      "|---|---|---|---|---|---|---|\n"
+                      f"| {b['scalar_rows_per_s']:.0f} "
+                      f"| {b['batched_rows_per_s']:.0f} "
+                      f"| {b['speedup']:.1f}x | {b['dispatch_reduction']:.1f}x "
+                      f"| {b['latency_ms']['p50']:.2f} "
+                      f"| {b['latency_ms']['p99']:.2f} "
+                      f"| {b['parity']} |\n")
+    return True
+
+
+def run_bench(*, rows: int = 6000, clients: int = 12, workload: str = "smoke",
+              scenario: str = "bursty_tt", impl: str = "numpy",
+              rate: float = 0.0, seed: int = 0) -> dict:
+    predictor, requests = build_stream(workload=workload, scenario=scenario,
+                                       seed=seed, min_rows=rows)
+    scalar = run_scalar(predictor, requests)
+    broker = run_broker(predictor, requests, clients=clients, impl=impl,
+                        rate=rate)
+    saturated = run_saturated(predictor, requests, impl=impl)
+    parity = (_parity(scalar, broker, saturated) if impl == "numpy"
+              else None)
+    return summarize(scalar, broker, saturated, parity)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.online.bench",
+        description="Broker load generator: replay fleet decision streams")
+    ap.add_argument("--rows", type=int, default=6000)
+    ap.add_argument("--clients", type=int, default=12)
+    ap.add_argument("--workload", default="smoke")
+    ap.add_argument("--scenario", default="bursty_tt")
+    ap.add_argument("--impl", default="numpy",
+                    choices=("numpy", "auto", "xla", "pallas", "interpret"))
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="per-client request rate (req/s, 0 = max)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="experiments",
+                    help="directory for ONLINE.json")
+    ap.add_argument("--stamp-sweep", nargs="?", const="experiments/SWEEP.json",
+                    default=None, metavar="SWEEP_JSON",
+                    help="merge the summary into an existing SWEEP.json/.md")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run (fewer rows/clients)")
+    args = ap.parse_args(argv)
+
+    rows, clients = args.rows, args.clients
+    if args.smoke:
+        rows, clients = min(rows, 2000), min(clients, 12)
+    summary = run_bench(rows=rows, clients=clients, workload=args.workload,
+                        scenario=args.scenario, impl=args.impl,
+                        rate=args.rate, seed=args.seed)
+
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "ONLINE.json").write_text(
+        json.dumps(summary, indent=2, sort_keys=True) + "\n")
+    b, s, f = summary["broker"], summary["scalar"], summary["saturated"]
+    print(f"[online] scalar    : {s['rows']} rows, {s['dispatches']} "
+          f"dispatches, {s['rows_per_s']:,.0f} rows/s "
+          f"({s['per_decision_rows_per_s']:,.0f} rows/s per-decision)")
+    print(f"[online] broker    : {b['rows']} rows, {b['dispatches']} "
+          f"dispatches ({b['flushes']} flushes, max batch "
+          f"{b['max_flush_rows']} rows), {b['rows_per_s']:,.0f} rows/s "
+          f"[p50 {b['latency_ms']['p50']:.2f} ms, "
+          f"p99 {b['latency_ms']['p99']:.2f} ms]")
+    print(f"[online] saturated : {f['rows']} rows, {f['dispatches']} "
+          f"dispatches ({f['flushes']} flushes), "
+          f"{f['rows_per_s']:,.0f} rows/s")
+    print(f"[online] batched speedup {summary['speedup']:.1f}x "
+          f"({summary['speedup_vs_per_decision']:.1f}x vs per-decision), "
+          f"dispatch reduction {summary['dispatch_reduction']:.1f}x, "
+          f"parity={summary['parity']}")
+    if args.stamp_sweep:
+        if stamp_sweep(summary, args.stamp_sweep):
+            print(f"[online] stamped perf into {args.stamp_sweep}")
+        else:
+            print(f"[online] no {args.stamp_sweep} to stamp (run the sweep "
+                  "first)")
+
+    if (summary["broker"]["rows_per_s"] <= 0
+            or summary["saturated"]["rows_per_s"] <= 0
+            or summary["parity"] is False):
+        print("[online] FAIL: no batched throughput or parity break",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,319 @@
+"""Batched prediction broker — the serving hot path of the ATLAS predictors.
+
+Two layers, composable:
+
+* ``BrokerPredictor`` (drop-in ``TaskPredictor``): batches *within* a scheduler
+  tick.  ``begin_tick`` snapshots the schedulable set; the first request of the
+  tick primes one vectorised flush over (pending ∪ penalty-box) tasks x
+  free-slot nodes, and every later ``p_success`` / ``p_success_nodes`` in the
+  tick is served from an exact-feature memo.  Misses (state moved under the
+  tick — e.g. a launch consumed a slot) are flushed as their own small batch.
+
+* ``PredictionBroker``: batches *across* clients.  Fleet ATLAS cells run
+  concurrently as broker clients; a request parks until every registered
+  client has one queued (a lock-step round), then the whole round is scored as
+  ONE fused pass over the stacked forests (``ml.forest.forest_predict_grouped``)
+  and distributed.  Rounds are a pure function of each client's request
+  sequence — no timers — so flush/dispatch counts are deterministic and a
+  brokered sweep reproduces the serial sweep byte-for-byte.
+
+Exactness: probabilities must not depend on how requests are batched, or
+decisions would drift between executors.  Per-row forest arithmetic is
+batch-independent by construction (fixed-order tree mean — see
+``ml.forest._mean_over_trees``), and the scalar path
+(``TaskPredictor.predict_batch``) pins forest-family scoring to the same
+numpy mirror at every batch size, so memo hits, primed rows, fused flushes
+and scalar calls all produce bit-identical floats for the forest family
+(Tree / CTree / R.F.) on any fleet size.  Other algos score unfused via their
+own ``predict_proba``.
+
+``impl`` selects the flush backend: ``"numpy"`` (default — strict parity via
+the small-batch fast path), ``"auto"`` (size-dispatched: big flushes route to
+the XLA/Pallas forest kernel, trading last-ulp parity for MXU throughput), or
+an explicit kernel impl (``"xla"`` / ``"pallas"`` / ``"interpret"``).
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.cluster.telemetry import attempt_features
+from repro.core.predictor import TaskPredictor, forest_family_params
+from repro.ml.forest import SMALL_BATCH, forest_predict, forest_predict_grouped
+
+
+def score_groups(groups, impl: str = "numpy") -> tuple[list, int]:
+    """Score ``[(model, X)]`` -> ``([probs], n_dispatches)``.
+
+    Requests against the same forest model are coalesced into one row block
+    (then sliced back apart — per-row arithmetic, so bit-identical to scoring
+    each request alone), and distinct forest models fuse into one pass per
+    forest shape.  Other models (and, under ``impl="auto"``, oversized row
+    blocks bound for the XLA/Pallas kernel) each cost one dispatch."""
+    outs: list = [None] * len(groups)
+    arrays: list = [None] * len(groups)
+    merged: dict[int, list[int]] = {}         # id(params) -> group indices
+    params_of: dict[int, object] = {}
+    n = 0
+    for i, (model, X) in enumerate(groups):
+        X = np.asarray(X, np.float32)
+        arrays[i] = X
+        if X.shape[0] == 0:
+            outs[i] = np.zeros(0, np.float32)
+            continue
+        params = forest_family_params(model)
+        if params is None:
+            outs[i] = np.asarray(model.predict_proba(X), np.float32)
+            n += 1
+            continue
+        merged.setdefault(id(params), []).append(i)
+        params_of[id(params)] = params
+
+    def scatter(idxs, block):
+        o = 0
+        for i in idxs:
+            b = arrays[i].shape[0]
+            outs[i] = block[o:o + b]
+            o += b
+
+    fuse: list[tuple[list, object, np.ndarray]] = []
+    for pid, idxs in merged.items():
+        X = (arrays[idxs[0]] if len(idxs) == 1 else
+             np.concatenate([arrays[i] for i in idxs]))
+        params = params_of[pid]
+        if impl == "numpy" or (impl == "auto" and X.shape[0] <= SMALL_BATCH):
+            fuse.append((idxs, params, X))
+        else:
+            kernel_impl = None if impl == "auto" else impl
+            n += 1
+            scatter(idxs, np.clip(
+                forest_predict(params, X, impl=kernel_impl),
+                0.0, 1.0).astype(np.float32))
+    if fuse:
+        raw, passes = forest_predict_grouped([(p, X) for _, p, X in fuse])
+        n += passes
+        for (idxs, _, _), scores in zip(fuse, raw):
+            # same clip the forest models apply in predict_proba
+            scatter(idxs, np.clip(scores, 0.0, 1.0).astype(np.float32))
+    return outs, n
+
+
+class _Pending:
+    __slots__ = ("groups", "outs", "error", "done")
+
+    def __init__(self, groups):
+        self.groups = groups
+        self.outs = None
+        self.error = None
+        self.done = False
+
+
+class PredictionBroker:
+    """Cross-client batching server with a deterministic barrier flush.
+
+    Clients are registered up front (``add_clients``) so round membership
+    never depends on thread start-up timing; each client calls ``done()``
+    (in a ``finally``) when its run completes.  ``submit`` blocks until the
+    round containing the request is flushed."""
+
+    def __init__(self, impl: str = "numpy"):
+        self.impl = impl
+        self._cv = threading.Condition()
+        self._queue: list[_Pending] = []
+        self._clients = 0
+        # accounting
+        self.n_flushes = 0
+        self.n_dispatches = 0
+        self.n_rows = 0
+        self.n_requests = 0
+        self.max_flush_rows = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def add_clients(self, n: int = 1):
+        with self._cv:
+            self._clients += n
+
+    def done(self):
+        """A client finished: it will never submit again, so a waiting round
+        must not hold the barrier open for it."""
+        with self._cv:
+            self._clients -= 1
+            if self._queue and len(self._queue) >= max(self._clients, 1):
+                self._flush_locked()
+
+    # ------------------------------------------------------------ serving
+    def submit(self, groups) -> list:
+        """Block until this request's round flushes; returns one probability
+        array per (model, X) group."""
+        if not groups:
+            return []
+        p = _Pending(groups)
+        with self._cv:
+            self.n_requests += 1
+            self._queue.append(p)
+            if len(self._queue) >= max(self._clients, 1):
+                self._flush_locked()
+            while not p.done:
+                self._cv.wait()
+        if p.error is not None:
+            raise p.error
+        return p.outs
+
+    def _flush_locked(self):
+        batch = self._queue
+        self._queue = []
+        flat = [g for p in batch for g in p.groups]
+        try:
+            outs, n = score_groups(flat, impl=self.impl)
+            rows = sum(np.asarray(X).shape[0] for _, X in flat)
+            self.n_flushes += 1
+            self.n_dispatches += n
+            self.n_rows += rows
+            self.max_flush_rows = max(self.max_flush_rows, rows)
+            at = 0
+            for p in batch:
+                p.outs = outs[at:at + len(p.groups)]
+                at += len(p.groups)
+                p.done = True
+        except Exception as e:  # surface in every waiting client
+            for p in batch:
+                p.error = e
+                p.done = True
+        finally:
+            self._cv.notify_all()
+
+    def stats(self) -> dict:
+        return {"flushes": self.n_flushes, "dispatches": self.n_dispatches,
+                "rows": self.n_rows, "requests": self.n_requests,
+                "max_flush_rows": self.max_flush_rows}
+
+
+class BrokerPredictor(TaskPredictor):
+    """Drop-in ``TaskPredictor`` that serves probabilities through batched
+    flushes (tick-primed memo + optional shared cross-cell broker) while
+    producing bit-identical decisions to the per-decision path."""
+
+    def __init__(self, *, broker: PredictionBroker | None = None,
+                 impl: str = "numpy", max_prime_rows: int = 4096, **kw):
+        super().__init__(**kw)
+        self.broker = broker
+        self.impl = impl
+        self.max_prime_rows = max_prime_rows
+        self._memo: dict = {}
+        self._primed = True          # no tick snapshot yet
+        self._tick_sim = None
+        self._tick_keys: tuple = ()
+        # demand-side accounting: what the per-decision path would have cost.
+        # These depend only on the decision sequence, so they are identical
+        # across executors (unlike dispatch counts, which the broker shrinks).
+        self.n_demand_calls = 0
+        self.n_demand_rows = 0
+        self.n_memo_hits = 0
+
+    # ------------------------------------------------------------ tick hooks
+    def begin_tick(self, sim, extra_keys=()):
+        self._memo.clear()
+        self._primed = False
+        self._tick_sim = sim
+        self._tick_keys = tuple(dict.fromkeys(
+            tuple(sim.pending) + tuple(extra_keys)))
+
+    def _models_changed(self):
+        # retrain/promote swaps the models: memoised probabilities are stale
+        memo = getattr(self, "_memo", None)
+        if memo is not None:
+            memo.clear()
+
+    # ------------------------------------------------------------ flushing
+    def _flush(self, groups) -> list:
+        if self.broker is not None:
+            return self.broker.submit(groups)
+        outs, n = score_groups(groups, impl=self.impl)
+        self.n_dispatches += n
+        self.n_rows_scored += sum(np.asarray(X).shape[0] for _, X in groups)
+        return outs
+
+    def _memoize(self, kind: str, X: np.ndarray, probs: np.ndarray):
+        for row, p in zip(X, probs):
+            self._memo[(kind, row.tobytes())] = np.float32(p)
+
+    def _prime(self, sim, extra_rows):
+        """One batched flush covering the whole schedulable cross product
+        (pending ∪ penalty-box tasks x nodes with a free slot of the right
+        kind) plus the rows of the triggering request."""
+        self._primed = True
+        per_kind: dict[str, list] = {}
+        for kind, x in extra_rows:
+            per_kind.setdefault(kind, []).append(x)
+        budget = self.max_prime_rows
+        for key in self._tick_keys:
+            if budget <= 0:
+                break
+            task = sim._task_by_key(key)
+            if task is None or task.status != "pending":
+                continue
+            if self.model_for_kind(task.kind) is None:
+                continue
+            for node in sim.nodes:
+                free = (node.free_map_slots() if task.kind == "map"
+                        else node.free_reduce_slots())
+                if free <= 0:
+                    continue
+                per_kind.setdefault(task.kind, []).append(
+                    attempt_features(sim, task, node, False))
+                budget -= 1
+        kinds = [k for k, rows in per_kind.items()
+                 if rows and self.model_for_kind(k) is not None]
+        if not kinds:
+            return
+        groups = [(self.model_for_kind(k), np.stack(per_kind[k]))
+                  for k in kinds]
+        outs = self._flush(groups)
+        for k, (_, X), probs in zip(kinds, groups, outs):
+            self._memoize(k, X, probs)
+
+    # ------------------------------------------------------------ inference
+    def p_success(self, sim, task, node, speculative=False) -> float:
+        model = self.model_for_kind(task.kind)
+        if model is None:
+            return 1.0
+        self.n_demand_calls += 1
+        self.n_demand_rows += 1
+        x = attempt_features(sim, task, node, speculative)
+        if not self._primed:
+            self._prime(sim, [(task.kind, x)])
+        p = self._memo.get((task.kind, x.tobytes()))
+        if p is None:
+            (out,) = self._flush([(model, x[None])])
+            self._memoize(task.kind, x[None], out)
+            p = out[0]
+        else:
+            self.n_memo_hits += 1
+        return float(p)
+
+    def p_success_nodes(self, sim, task, nodes, speculative=False) -> np.ndarray:
+        model = self.model_for_kind(task.kind)
+        if model is None or not len(nodes):
+            return np.ones(len(nodes), np.float32)
+        self.n_demand_calls += 1
+        self.n_demand_rows += len(nodes)
+        X = np.stack([attempt_features(sim, task, n, speculative)
+                      for n in nodes])
+        if not self._primed:
+            self._prime(sim, [(task.kind, x) for x in X])
+        out = np.empty(len(nodes), np.float32)
+        missing = []
+        for i, row in enumerate(X):
+            p = self._memo.get((task.kind, row.tobytes()))
+            if p is None:
+                missing.append(i)
+            else:
+                self.n_memo_hits += 1
+                out[i] = p
+        if missing:
+            (scored,) = self._flush([(model, X[missing])])
+            self._memoize(task.kind, X[missing], scored)
+            out[missing] = scored
+        return out

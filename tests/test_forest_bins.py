@@ -1,0 +1,42 @@
+"""Regression tests for make_bins de-duplication (the docstring always
+promised it; duplicate quantiles of constant/low-cardinality features used to
+survive as repeated zero-gain candidate splits)."""
+
+import numpy as np
+
+from repro.ml.forest import fit_oblivious_forest, make_bins
+
+
+def test_make_bins_deduplicates_constant_and_low_cardinality_features():
+    rs = np.random.RandomState(0)
+    X = np.stack([
+        np.full(200, 3.7, np.float32),            # constant
+        (np.arange(200) % 2).astype(np.float32),  # binary
+        rs.rand(200).astype(np.float32),          # continuous
+    ], axis=1)
+    thr = make_bins(X, 8)
+    assert thr.shape == (3, 8)                    # grid shape preserved
+    # constant feature: one finite threshold, +inf padding
+    finite0 = thr[0][np.isfinite(thr[0])]
+    assert finite0.tolist() == [np.float32(3.7)]
+    assert np.isinf(thr[0, 1:]).all()
+    # every row is strictly increasing over its finite prefix (no duplicates)
+    for f in range(3):
+        row = thr[f][np.isfinite(thr[f])]
+        assert (np.diff(row) > 0).all()
+    # continuous feature keeps its full quantile ladder
+    assert np.isfinite(thr[2]).all()
+    # the +inf sentinels can never split: x > inf is identically False
+    assert not (X[:, 0:1] > thr[0, 1:][None]).any()
+
+
+def test_constant_feature_never_selected_over_informative_split():
+    rs = np.random.RandomState(3)
+    X = rs.randn(800, 5).astype(np.float32)
+    logit = 1.2 * X[:, 1] - 0.8 * X[:, 2]
+    y = (rs.rand(800) < 1 / (1 + np.exp(-logit))).astype(np.float32)
+    Xc = np.concatenate([np.full((800, 1), 5.0, np.float32), X], axis=1)
+    params = fit_oblivious_forest(Xc, y, n_trees=4, depth=4, n_bins=8,
+                                  bootstrap=False, seed=0)
+    assert not (params.feat_idx == 0).any()       # constant column unused
+    assert np.isfinite(params.thresholds).all()

@@ -1,0 +1,199 @@
+"""Online broker tests: batch-shape-invariant forest scoring, fused group
+flushes, broker/scalar decision parity, cross-client dispatch reduction, and
+the fleet's broker executor reproducing the serial sweep byte-for-byte."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cluster.fleet import SweepSpec, run_sweep, sweep_json
+from repro.core.predictor import TaskPredictor
+from repro.ml.forest import (fit_oblivious_forest, forest_predict_grouped,
+                             forest_predict_np)
+from repro.ml.models import ALL_MODELS
+from repro.online.broker import (BrokerPredictor, PredictionBroker,
+                                 score_groups)
+
+
+def _forest_data(n=400, f=10, seed=0):
+    rng = np.random.RandomState(seed)
+    X = rng.rand(n, f).astype(np.float32)
+    y = (X[:, 0] + 0.3 * rng.rand(n) > 0.8).astype(np.float32)
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# Numeric groundwork: scoring must not depend on how rows are batched
+# ---------------------------------------------------------------------------
+
+def test_forest_predict_np_is_batch_shape_invariant():
+    X, y = _forest_data()
+    params = fit_oblivious_forest(X, y, n_trees=24, depth=5, n_bins=8)
+    Xq = _forest_data(seed=1)[0]
+    batch = forest_predict_np(params, Xq)
+    rows = np.array([forest_predict_np(params, Xq[i:i + 1])[0]
+                     for i in range(Xq.shape[0])], np.float32)
+    assert np.array_equal(batch, rows)          # bitwise, not approx
+    mid = forest_predict_np(params, Xq[:17])
+    assert np.array_equal(batch[:17], mid)
+
+
+def test_forest_predict_grouped_bitwise_and_single_pass():
+    X, y = _forest_data()
+    pa = fit_oblivious_forest(X, y, n_trees=24, depth=5, seed=0)
+    pb = fit_oblivious_forest(X, 1 - y, n_trees=24, depth=5, seed=1)
+    Xq = _forest_data(seed=2)[0]
+    groups = [(pa, Xq[:7]), (pb, Xq[7:40]), (pa, Xq[40:41]), (pb, Xq[41:])]
+    outs, passes = forest_predict_grouped(groups)
+    assert passes == 1                          # same shape -> one fused pass
+    for (params, rows), out in zip(groups, outs):
+        assert np.array_equal(out, forest_predict_np(params, rows))
+
+
+def test_score_groups_matches_model_predict_proba_bitwise():
+    # request sizes mirror the scheduler's candidate sets (<= SMALL_BATCH),
+    # where predict_proba takes the numpy fast path the broker fuses over
+    X, y = _forest_data()
+    models = {k: ALL_MODELS["R.F."]().fit(X, y) for k in ("a", "b")}
+    Xq = _forest_data(seed=3)[0]
+    groups = [(models["a"], Xq[:5]), (models["b"], Xq[5:60]),
+              (models["a"], Xq[60:61]), (models["a"], Xq[:0])]
+    outs, passes = score_groups(groups)
+    assert passes == 1
+    for (model, rows), out in zip(groups, outs):
+        assert np.array_equal(out, np.asarray(model.predict_proba(rows),
+                                              np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Cross-client broker: parity + >=10x fewer dispatches under concurrency
+# ---------------------------------------------------------------------------
+
+def test_cross_client_broker_parity_and_dispatch_reduction():
+    X, y = _forest_data(n=600)
+    model = ALL_MODELS["R.F."]().fit(X, y)
+    stream = _forest_data(n=600, seed=4)[0]
+    requests = [stream[i:i + 1 + (i % 3)] for i in range(0, 540, 3)]
+    scalar = [np.asarray(model.predict_proba(r), np.float32)
+              for r in requests]
+
+    n_clients = 12
+    broker = PredictionBroker()
+    broker.add_clients(n_clients)
+    outs = [None] * len(requests)
+
+    def client(idxs):
+        try:
+            for qi in idxs:
+                (outs[qi],) = broker.submit([(model, requests[qi])])
+        finally:
+            broker.done()
+
+    threads = [threading.Thread(
+        target=client, args=(range(c, len(requests), n_clients),))
+        for c in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    for a, b in zip(scalar, outs):
+        assert np.array_equal(a, b)
+    # per-decision path: one dispatch per request; barrier rounds fuse ~12
+    assert broker.n_dispatches * 10 <= len(requests)
+
+
+def test_broker_survives_uneven_client_exits():
+    """Clients with very different request counts must drain without deadlock
+    (the barrier must release rounds as clients deregister)."""
+    X, y = _forest_data()
+    model = ALL_MODELS["R.F."]().fit(X, y)
+    stream = _forest_data(seed=5)[0]
+    counts = [1, 3, 40]
+    broker = PredictionBroker()
+    broker.add_clients(len(counts))
+    got = []
+
+    def client(n):
+        try:
+            for i in range(n):
+                (out,) = broker.submit([(model, stream[i:i + 1])])
+                got.append(out)
+        finally:
+            broker.done()
+
+    threads = [threading.Thread(target=client, args=(n,)) for n in counts]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive(), "broker deadlocked"
+    assert len(got) == sum(counts)
+
+
+def test_broker_propagates_scoring_errors():
+    class Broken:
+        def predict_proba(self, X):
+            raise RuntimeError("boom")
+
+    broker = PredictionBroker()
+    with pytest.raises(RuntimeError, match="boom"):
+        broker.submit([(Broken(), np.ones((2, 4), np.float32))])
+
+
+# ---------------------------------------------------------------------------
+# Drop-in parity: a brokered ATLAS cell decides exactly like the scalar one
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_cell():
+    from repro.cluster.experiment import run_scheduler
+    from repro.cluster.fleet import CellSpec, cell_config
+    spec = SweepSpec(schedulers=("fifo", "atlas-fifo"), seeds=1,
+                     scenarios=("baseline",), workloads=("smoke",),
+                     min_samples=40, max_train=40)
+    cfg = cell_config(spec, CellSpec("atlas-fifo", "baseline", "smoke", 0))
+    _, trace, _ = run_scheduler("fifo", cfg, with_trace=True)
+    return cfg, trace.datasets()
+
+
+def _run_atlas(cfg, datasets, predictor):
+    from repro.cluster.experiment import run_scheduler
+    predictor.fit_datasets(*datasets)
+    metrics, _, _ = run_scheduler("atlas-fifo", cfg, predictor)
+    return metrics
+
+
+def test_broker_predictor_identical_decisions(smoke_cell):
+    cfg, datasets = smoke_cell
+    kw = dict(algo=cfg.algo, seed=cfg.seed, min_samples=cfg.min_samples,
+              max_train=cfg.max_train)
+    scalar = TaskPredictor(**kw)
+    m_scalar = _run_atlas(cfg, datasets, scalar)
+    brokered = BrokerPredictor(**kw)
+    m_broker = _run_atlas(cfg, datasets, brokered)
+    assert m_scalar == m_broker                 # every metric + sched stat
+    assert brokered.n_demand_calls == scalar.n_dispatches
+    # tick priming alone already beats per-call dispatching
+    assert brokered.n_dispatches < scalar.n_dispatches
+    assert brokered.n_memo_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# Fleet acceptance: broker executor == serial executor, >=10x fewer dispatches
+# ---------------------------------------------------------------------------
+
+def test_fleet_broker_executor_matches_serial_with_10x_fewer_dispatches():
+    spec = SweepSpec(schedulers=("fifo", "atlas-fifo"), seeds=12,
+                     scenarios=("baseline",), workloads=("smoke",),
+                     min_samples=40, max_train=40)
+    brokered = run_sweep(spec, executor="broker", log=lambda *a: None)
+    serial = run_sweep(spec, executor="serial", log=lambda *a: None)
+    strip = lambda r: {k: v for k, v in r.items() if k != "perf"}  # noqa: E731
+    assert sweep_json(strip(brokered)) == sweep_json(strip(serial))
+    b = brokered["perf"]["broker"]
+    assert b["demand_calls"] >= 10 * b["dispatches"]
+    # deterministic accounting: same spec -> same rounds -> same counts
+    again = run_sweep(spec, executor="broker", log=lambda *a: None)
+    assert sweep_json(brokered) == sweep_json(again)

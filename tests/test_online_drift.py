@@ -1,0 +1,150 @@
+"""Drift monitor + online refresher tests: PSI/score triggers, staleness
+fallback, candidate promotion vs rollback, registry event recording, and the
+end-to-end drift-aware ATLAS cell."""
+
+import types
+
+import numpy as np
+
+from repro.core.predictor import TaskPredictor
+from repro.online.drift import DriftMonitor, OnlineRefresher
+from repro.online.registry import ModelRegistry
+
+
+def _data(n=400, seed=0, shift=0.0):
+    rng = np.random.RandomState(seed)
+    X = (rng.rand(n, 6) + shift).astype(np.float32)
+    y = (X[:, 0] % 1.0 > 0.5).astype(np.float32)
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# DriftMonitor
+# ---------------------------------------------------------------------------
+
+def test_monitor_quiet_on_stationary_distribution():
+    X, y = _data()
+    mon = DriftMonitor(min_window=64)
+    mon.set_reference(X, brier=0.1)
+    X2, y2 = _data(seed=1)
+    # served probabilities as good as at training time -> no score drift
+    mon.observe(X2, y2, (0.8 * y2 + 0.1).astype(np.float32))
+    assert mon.feature_psi() < 0.05
+    hit, _ = mon.drifted()
+    assert not hit
+
+
+def test_monitor_fires_on_feature_shift():
+    X, _ = _data()
+    mon = DriftMonitor(min_window=64)
+    mon.set_reference(X, brier=0.1)
+    Xs, ys = _data(seed=1, shift=2.0)        # whole distribution moved
+    mon.observe(Xs, ys, np.full(len(ys), 0.7, np.float32))
+    assert mon.feature_psi() > 0.25
+    hit, reason = mon.drifted()
+    assert hit and "feature_psi" in reason
+
+
+def test_monitor_fires_on_score_degradation():
+    X, y = _data()
+    mon = DriftMonitor(min_window=64)
+    mon.set_reference(X, brier=0.02)
+    X2, y2 = _data(seed=1)
+    # the served probabilities are confidently wrong -> Brier collapses
+    mon.observe(X2, y2, (1.0 - y2).astype(np.float32))
+    hit, reason = mon.drifted()
+    assert hit and "brier_drift" in reason
+    assert mon.score_drift() > 0.5
+
+
+def test_monitor_sliding_window_bounded():
+    X, y = _data(n=100)
+    mon = DriftMonitor(window=50)
+    mon.observe(X, y, np.zeros(100, np.float32))
+    assert len(mon.window_arrays()[1]) == 50
+
+
+# ---------------------------------------------------------------------------
+# OnlineRefresher
+# ---------------------------------------------------------------------------
+
+def _stub_sim(X, y, now=1000.0):
+    trace = types.SimpleNamespace(
+        datasets=lambda: ((X, y), (np.zeros((0, X.shape[1]), np.float32),
+                                   np.zeros(0, np.float32))))
+    return types.SimpleNamespace(trace=trace, now=now)
+
+
+def _fresh_refresher(registry=None, **kw):
+    pred = TaskPredictor(algo="R.F.", min_samples=50)
+    ref = OnlineRefresher(registry=registry, retrain_every=600.0,
+                          check_every=60.0, **kw)
+    ref.bind_predictor(pred)
+    return pred, ref
+
+
+def test_staleness_triggers_first_fit_and_promotion(tmp_path):
+    reg = ModelRegistry(tmp_path)
+    pred, ref = _fresh_refresher(registry=reg, name="cell0")
+    X, y = _data()
+    assert ref.step(_stub_sim(X, y, now=700.0))   # past the staleness clock
+    assert pred.ready
+    assert ref.promotions == 1 and ref.rollbacks == 0
+    assert [e["event"] for e in ref.events] == ["promote"]
+    assert reg.head("cell0") == 1
+
+
+def test_no_refresh_inside_clock_without_drift():
+    pred, ref = _fresh_refresher()
+    X, y = _data()
+    ref.step(_stub_sim(X, y, now=700.0))          # trains + rebaselines
+    assert not ref.step(_stub_sim(X, y, now=720.0))
+    assert ref.refreshes == 1
+
+
+def test_drift_triggers_refresh_before_clock():
+    pred, ref = _fresh_refresher()
+    X, y = _data()
+    ref.step(_stub_sim(X, y, now=700.0))
+    # drifted world arrives well before the next 600 s tick
+    Xs, ys = _data(seed=3, shift=2.0)
+    X2 = np.concatenate([X, Xs])
+    y2 = np.concatenate([y, ys])
+    assert ref.step(_stub_sim(X2, y2, now=760.0))
+    assert ref.refreshes == 2
+    assert any("feature_psi" in (e.get("reason") or "")
+               for e in ref.events[1:])
+
+
+def test_bad_candidate_is_rolled_back(tmp_path):
+    reg = ModelRegistry(tmp_path)
+    pred, ref = _fresh_refresher(registry=reg, name="cell1")
+    X, y = _data(n=600)
+    ref.step(_stub_sim(X, y, now=700.0))          # good live model
+    head_before = reg.head("cell1")
+    # seed the window with reality the live model predicts well...
+    Xw, yw = _data(n=300, seed=5)
+    ref.monitors["map"].observe(Xw, yw, pred.predict_batch("map", Xw))
+    # ...then force a retrain on poisoned labels: the candidate must lose the
+    # window duel and be archived, not promoted
+    assert ref._refresh(_stub_sim(X, 1 - y, now=1400.0), "test")
+    assert ref.rollbacks == 1
+    assert ref.events[-1]["event"] == "rollback"
+    assert reg.head("cell1") == head_before       # HEAD untouched
+    assert len(reg.versions("cell1")) == 2        # candidate archived
+    # live predictor still serves the good model
+    p = pred.predict_batch("map", Xw)
+    assert float(np.mean((p - yw) ** 2)) < 0.2
+
+
+def test_drift_aware_atlas_cell_end_to_end():
+    from repro.cluster.experiment import ExperimentConfig, run_scheduler
+    from repro.cluster.scenarios import workload_for_seed
+    cfg = ExperimentConfig(workload=workload_for_seed("smoke", 7),
+                           min_samples=40, max_train=40, drift=True,
+                           drift_check_every=60.0)
+    metrics, _, sim = run_scheduler("atlas-fifo", cfg)
+    stats = metrics["sched_stats"]
+    assert "refreshes" in stats and "promotions" in stats
+    assert stats["refreshes"] >= 1
+    assert sim.scheduler.refresher.events

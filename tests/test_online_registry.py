@@ -1,0 +1,122 @@
+"""Model registry tests: atomic versioned publish/load round-trips,
+promote/rollback lifecycle, digest verification, and the fleet shipping model
+versions instead of raw training traces."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster.fleet import SweepSpec, run_sweep, sweep_json
+from repro.core.predictor import TaskPredictor
+from repro.online.registry import ModelRegistry
+
+
+def _trained_predictor(seed=0, flip=False):
+    rng = np.random.RandomState(seed)
+    X = rng.rand(300, 8).astype(np.float32)
+    y = (X[:, 0] > 0.5).astype(np.float32)
+    if flip:
+        y = 1 - y
+    pred = TaskPredictor(algo="R.F.", min_samples=50, seed=seed)
+    pred.fit_datasets((X, y), (X, 1 - y))
+    return pred, X
+
+
+# ---------------------------------------------------------------------------
+# Snapshot + registry round trips
+# ---------------------------------------------------------------------------
+
+def test_snapshot_roundtrip_scores_bitwise():
+    pred, X = _trained_predictor()
+    other = TaskPredictor().load_snapshot(pred.snapshot())
+    for kind in ("map", "reduce"):
+        assert np.array_equal(pred.predict_batch(kind, X),
+                              other.predict_batch(kind, X))
+    assert other.fits == pred.fits
+
+
+def test_registry_publish_load_roundtrip(tmp_path):
+    pred, X = _trained_predictor()
+    reg = ModelRegistry(tmp_path)
+    v = reg.publish("fifo/baseline/smoke/s0", pred.snapshot(),
+                    meta={"role": "train"})
+    assert v == 1
+    snap = reg.load("fifo/baseline/smoke/s0")
+    other = TaskPredictor().load_snapshot(snap)
+    for kind in ("map", "reduce"):
+        assert np.array_equal(pred.predict_batch(kind, X),
+                              other.predict_batch(kind, X))
+    # layout: version dir with meta + params, HEAD, events ledger
+    assert (tmp_path / "fifo/baseline/smoke/s0/v_000001/meta.json").exists()
+    assert (tmp_path / "fifo/baseline/smoke/s0/HEAD").read_text() == "1"
+    events = reg.history("fifo/baseline/smoke/s0")
+    assert [e["event"] for e in events] == ["publish"]
+
+
+def test_registry_versioning_promote_rollback(tmp_path):
+    reg = ModelRegistry(tmp_path)
+    p1, _ = _trained_predictor(seed=1)
+    p2, _ = _trained_predictor(seed=2)
+    assert reg.publish("m", p1.snapshot()) == 1
+    assert reg.publish("m", p2.snapshot()) == 2
+    assert reg.versions("m") == [1, 2]
+    assert reg.head("m") == 2
+    assert reg.rollback("m") == 1
+    assert reg.head("m") == 1
+    assert reg.load("m")["seed"] == 1           # HEAD serves v1 again
+    reg.promote("m", 2)
+    assert reg.head("m") == 2
+    assert [e["event"] for e in reg.history("m")] == \
+        ["publish", "publish", "rollback", "promote"]
+    with pytest.raises(KeyError):
+        reg.promote("m", 99)
+
+
+def test_registry_archived_candidate_does_not_move_head(tmp_path):
+    reg = ModelRegistry(tmp_path)
+    p1, _ = _trained_predictor(seed=1)
+    p2, _ = _trained_predictor(seed=2)
+    reg.publish("m", p1.snapshot())
+    v = reg.publish("m", p2.snapshot(), promote=False)
+    assert v == 2 and reg.head("m") == 1
+    assert reg.load("m", version=2)["seed"] == 2   # still loadable explicitly
+
+
+def test_registry_detects_corruption(tmp_path):
+    pred, _ = _trained_predictor()
+    reg = ModelRegistry(tmp_path)
+    reg.publish("m", pred.snapshot())
+    meta_path = tmp_path / "m/v_000001/meta.json"
+    meta = json.loads(meta_path.read_text())
+    meta["digests"]["map__leaves"] = "0" * 16
+    meta_path.write_text(json.dumps(meta))
+    with pytest.raises(IOError, match="digest mismatch"):
+        reg.load("m")
+
+
+def test_non_forest_snapshot_rejected():
+    rng = np.random.RandomState(0)
+    X = rng.rand(300, 8).astype(np.float32)
+    y = (X[:, 0] > 0.5).astype(np.float32)
+    pred = TaskPredictor(algo="Glm", min_samples=50)
+    pred.fit_datasets((X, y), (X, y))
+    with pytest.raises(ValueError, match="registry-serialisable"):
+        pred.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# Fleet integration: model versions replace raw trace arrays
+# ---------------------------------------------------------------------------
+
+def test_fleet_registry_mode_matches_dataset_mode(tmp_path):
+    spec = SweepSpec(schedulers=("atlas-fifo",), seeds=2,
+                     scenarios=("baseline",), workloads=("smoke",),
+                     min_samples=40, max_train=40)
+    plain = run_sweep(spec, executor="serial", log=lambda *a: None)
+    via_registry = run_sweep(spec, executor="serial",
+                             registry=str(tmp_path), log=lambda *a: None)
+    assert sweep_json(plain) == sweep_json(via_registry)
+    reg = ModelRegistry(tmp_path)
+    assert reg.versions("fifo/baseline/smoke/s0") == [1]
+    assert reg.versions("fifo/baseline/smoke/s1") == [1]
