@@ -1,7 +1,7 @@
 # Used verbatim by .github/workflows/ci.yml.
 PY ?= python
 
-.PHONY: test lint sweep-smoke online-smoke
+.PHONY: test lint sweep-smoke online-smoke bench-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -22,4 +22,13 @@ sweep-smoke:
 # into experiments/SWEEP.json when the smoke sweep already produced one
 online-smoke:
 	PYTHONPATH=src $(PY) -m repro.online.bench --smoke \
+		--out experiments --stamp-sweep experiments/SWEEP.json
+
+# tiny perf-trajectory run: benches the block-diagonal serving path on the
+# paper fleet AND a 100-node fleet, emits experiments/BENCH_<pr>.json, stamps
+# per-size throughput/latency into SWEEP.json, and exits non-zero on a parity
+# break or zero batched throughput
+bench-smoke:
+	PYTHONPATH=src $(PY) -m repro.online.bench --smoke \
+		--fleet-sizes 0,100 \
 		--out experiments --stamp-sweep experiments/SWEEP.json

@@ -22,6 +22,6 @@ Layers:
 
 __version__ = "1.0.0"
 
-# Stamped into SWEEP.json / ONLINE.json so the perf trajectory across PRs is
-# readable from one artifact.  Bump per PR.
-PR_TAG = "PR4-online-broker"
+# Stamped into SWEEP.json / ONLINE.json / BENCH_<n>.json so the perf
+# trajectory across PRs is readable from one artifact.  Bump per PR.
+PR_TAG = "PR5-columnar-blockdiag"

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.cluster.chaos import ChaosConfig, ChaosInjector
-from repro.cluster.simulator import Simulator
+from repro.cluster.simulator import Simulator, make_fleet
 from repro.cluster.telemetry import TelemetryTrace
 from repro.cluster.workload import WorkloadConfig, install, make_workload
 from repro.core.atlas import ATLASScheduler
@@ -39,10 +39,17 @@ class ExperimentConfig:
     # drift-aware refresh (repro.online.drift) instead of the fixed clock
     drift: bool = False
     drift_check_every: float = 60.0
+    # fleet-size scale axis: 0 = the paper's 13-slave EMR fleet, N = an
+    # N-node fleet cycling the same machine mix (simulator.make_fleet)
+    fleet_size: int = 0
+
+
+def _fleet_for(cfg: "ExperimentConfig"):
+    return make_fleet(cfg.fleet_size) if cfg.fleet_size else None
 
 
 def _new_sim(scheduler, cfg: ExperimentConfig, trace) -> Simulator:
-    sim = Simulator(scheduler, seed=cfg.seed,
+    sim = Simulator(scheduler, fleet=_fleet_for(cfg), seed=cfg.seed,
                     heartbeat_interval=cfg.heartbeat_interval,
                     chaos=ChaosInjector(cfg.chaos), trace=trace,
                     hazard_noise=cfg.hazard_noise)

@@ -77,22 +77,34 @@ TABLE_METRICS = ("pct_tasks_failed", "pct_jobs_failed", "job_exec_time",
 
 @dataclasses.dataclass(frozen=True)
 class CellSpec:
-    """One run of the matrix: a scheduler at a (scenario, workload, seed)."""
+    """One run of the matrix: a scheduler at a (scenario, workload,
+    fleet-size, seed).  ``fleet_size`` 0 is the paper's 13-slave fleet and is
+    omitted from ids/keys so default sweeps keep their PR-3/4 coordinates."""
     scheduler: str
     scenario: str
     workload: str
     seed_index: int
+    fleet_size: int = 0
 
     @property
     def env_key(self) -> tuple:
         """Scheduler-independent coordinates: every scheduler sees the same
         workload + failure storm at a given env_key (paper §5 protocol)."""
+        if self.fleet_size:
+            return (self.scenario, self.workload, f"n{self.fleet_size}",
+                    self.seed_index)
         return (self.scenario, self.workload, self.seed_index)
 
     @property
+    def env_label(self) -> str:
+        env = f"{self.scenario}/{self.workload}"
+        if self.fleet_size:
+            env += f"/n{self.fleet_size}"
+        return env
+
+    @property
     def cell_id(self) -> str:
-        return (f"{self.scenario}/{self.workload}/{self.scheduler}"
-                f"/s{self.seed_index}")
+        return f"{self.env_label}/{self.scheduler}/s{self.seed_index}"
 
 
 @dataclasses.dataclass
@@ -102,6 +114,7 @@ class SweepSpec:
     seeds: int | tuple = 3            # count (0..n-1) or explicit indices
     scenarios: tuple = ("baseline",)
     workloads: tuple = ("default",)
+    fleet_sizes: tuple = (0,)         # 0 = paper fleet; N = make_fleet(N)
     algo: str = "R.F."
     threshold: float = 0.5
     n_speculative: int = 2
@@ -117,7 +130,7 @@ class SweepSpec:
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
         d["seeds"] = list(self.seed_indices())
-        for k in ("schedulers", "scenarios", "workloads"):
+        for k in ("schedulers", "scenarios", "workloads", "fleet_sizes"):
             d[k] = list(d[k])
         return d
 
@@ -144,13 +157,18 @@ def expand(spec: SweepSpec) -> list[CellSpec]:
     if spec.algo not in ALL_MODELS:
         raise KeyError(f"unknown predictor algo {spec.algo!r}; known: "
                        f"{', '.join(sorted(ALL_MODELS))}")
+    for fs in spec.fleet_sizes:
+        if fs < 0:
+            raise KeyError(f"negative fleet size {fs}")
     cells = {
-        CellSpec(scheduler=sched, scenario=sc, workload=wl, seed_index=si)
+        CellSpec(scheduler=sched, scenario=sc, workload=wl, seed_index=si,
+                 fleet_size=fs)
         for sc in spec.scenarios for wl in spec.workloads
+        for fs in spec.fleet_sizes
         for sched in spec.schedulers for si in spec.seed_indices()
     }
-    return sorted(cells, key=lambda c: (c.scenario, c.workload, c.scheduler,
-                                        c.seed_index))
+    return sorted(cells, key=lambda c: (c.scenario, c.workload, c.fleet_size,
+                                        c.scheduler, c.seed_index))
 
 
 def cell_config(spec: SweepSpec, cell: CellSpec) -> ExperimentConfig:
@@ -162,7 +180,7 @@ def cell_config(spec: SweepSpec, cell: CellSpec) -> ExperimentConfig:
         heartbeat_interval=spec.heartbeat_interval,
         algo=spec.algo, threshold=spec.threshold,
         n_speculative=spec.n_speculative, min_samples=spec.min_samples,
-        max_train=spec.max_train)
+        max_train=spec.max_train, fleet_size=cell.fleet_size)
 
 
 # ---------------------------------------------------------------------------
@@ -332,13 +350,18 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
     atlas_cells = [c for c in cells if atlas_base_name(c.scheduler) is not None]
 
     # training runs needed: one per (base, env) over the ATLAS cells
-    needed_train = {(atlas_base_name(c.scheduler),) + c.env_key
-                    for c in atlas_cells}
+    needed_cells: dict[tuple, CellSpec] = {}
+    for c in atlas_cells:
+        base = atlas_base_name(c.scheduler)
+        needed_cells.setdefault(
+            (base,) + c.env_key, dataclasses.replace(c, scheduler=base))
+    needed_train = set(needed_cells)
     covered = {(c.scheduler,) + c.env_key for c in base_cells}
-    train_only = sorted(needed_train - covered)
-    train_cells = [CellSpec(scheduler=base, scenario=sc, workload=wl,
-                            seed_index=si)
-                   for base, sc, wl, si in train_only]
+    # env_key tuples vary in length across fleet sizes: sort on stringified
+    # coordinates so the wave order stays total and deterministic
+    train_only = sorted(needed_train - covered,
+                        key=lambda k: tuple(str(p) for p in k))
+    train_cells = [needed_cells[k] for k in train_only]
 
     wave1 = [(c, cell_config(spec, c), (c.scheduler,) + c.env_key
               in needed_train, registry) for c in base_cells]
@@ -403,6 +426,7 @@ def _cell_record(cell: CellSpec, metrics: dict, stats: dict) -> dict:
         "scenario": cell.scenario,
         "workload": cell.workload,
         "seed_index": cell.seed_index,
+        "fleet_size": cell.fleet_size,
         "metrics": metrics,
         "stats": dict(stats),
     }
@@ -430,8 +454,10 @@ def aggregate(records: list[dict]) -> dict:
     {metric: {mean, ci95, n}}}."""
     groups: dict[str, list[dict]] = {}
     for r in records:
-        key = f"{r['scenario']}/{r['workload']}/{r['scheduler']}"
-        groups.setdefault(key, []).append(r)
+        env = f"{r['scenario']}/{r['workload']}"
+        if r.get("fleet_size"):
+            env += f"/n{r['fleet_size']}"
+        groups.setdefault(f"{env}/{r['scheduler']}", []).append(r)
     out = {}
     for key, rs in sorted(groups.items()):
         metric_names = sorted({m for r in rs for m in r["metrics"]})
@@ -493,6 +519,10 @@ def sweep_markdown(result: dict) -> str:
                  f"seeds: {len(spec['seeds'])} — "
                  f"scenarios: {', '.join(spec['scenarios'])} — "
                  f"workloads: {', '.join(spec['workloads'])}")
+    sizes = spec.get("fleet_sizes", [0])
+    if any(sizes):
+        lines.append("Fleet sizes: " + ", ".join(
+            "paper (13)" if s == 0 else str(s) for s in sizes))
     pr = result.get("provenance", {}).get("pr")
     if pr:
         lines += ["", f"Produced by: {pr}"]
@@ -558,6 +588,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help=f"comma list or 'all' ({', '.join(sorted(SCENARIOS))})")
     ap.add_argument("--workloads", default="default",
                     help="comma list: " + ", ".join(sorted(WORKLOAD_SHAPES)))
+    ap.add_argument("--fleet-size", default="0", dest="fleet_sizes",
+                    metavar="SIZES",
+                    help="comma list of fleet sizes (0 = the paper's "
+                         "13-slave fleet; N = an N-node fleet of the same "
+                         "machine mix) — a sweep axis")
     ap.add_argument("--algo", default="R.F.")
     ap.add_argument("--min-samples", type=int, default=150,
                     help="min labelled rows before a model trains")
@@ -586,6 +621,7 @@ def main(argv=None) -> int:
         seeds=args.seeds,
         scenarios=scenarios,
         workloads=tuple(args.workloads.split(",")),
+        fleet_sizes=tuple(int(s) for s in args.fleet_sizes.split(",")),
         algo=args.algo, min_samples=args.min_samples)
     try:
         expand(spec)

@@ -49,6 +49,19 @@ MACHINE_TYPES = {
 DEFAULT_FLEET = (["m3.large"] * 5 + ["m4.xlarge"] * 4 + ["c4.xlarge"] * 4)
 
 
+def make_fleet(n_nodes: int) -> list[str]:
+    """A fleet of ``n_nodes`` machines cycling the paper's Table-2 mix — the
+    scale axis beyond the 15-machine EMR cluster (0 -> the paper's fleet)."""
+    if n_nodes <= 0:
+        return list(DEFAULT_FLEET)
+    return [DEFAULT_FLEET[i % len(DEFAULT_FLEET)] for i in range(n_nodes)]
+
+
+# failure-history window (seconds) behind Node.recent_failure_count — also the
+# eviction cutoff, so the deque holds O(window) entries however long the run
+FAILURE_WINDOW = 600.0
+
+
 @dataclasses.dataclass
 class Node:
     nid: int
@@ -64,7 +77,7 @@ class Node:
     running_maps: int = 0
     running_reduces: int = 0
     recent_failures: deque = dataclasses.field(
-        default_factory=lambda: deque(maxlen=64))  # (time, attempt) failures on node
+        default_factory=deque)     # failure times on node, window-evicted
     finished_count: int = 0
     failed_count: int = 0
     restarts: int = 0
@@ -75,8 +88,30 @@ class Node:
     def free_reduce_slots(self) -> int:
         return self.spec.reduce_slots - self.running_reduces
 
-    def recent_failure_count(self, now: float, horizon: float = 600.0) -> int:
-        return sum(1 for t in self.recent_failures if now - t <= horizon)
+    def record_failure(self, now: float):
+        """Append a failure timestamp, evicting entries past the window — the
+        deque stays O(window) over arbitrarily long chaos runs.  (Unlike the
+        old fixed maxlen=64 deque, a node with >64 failures inside the window
+        now reports its true count.)"""
+        dq = self.recent_failures
+        dq.append(now)
+        cutoff = now - FAILURE_WINDOW
+        while dq[0] < cutoff:
+            dq.popleft()
+
+    def recent_failure_count(self, now: float,
+                             horizon: float = FAILURE_WINDOW) -> int:
+        """Failures within the horizon: O(evicted) amortised, not a scan.
+        Eviction always uses FAILURE_WINDOW (a shorter query horizon must not
+        destroy entries still inside the retention window); timestamps are
+        appended in event order, so the post-eviction deque IS the window."""
+        dq = self.recent_failures
+        cutoff = now - FAILURE_WINDOW
+        while dq and dq[0] < cutoff:
+            dq.popleft()
+        if horizon >= FAILURE_WINDOW:
+            return len(dq)
+        return sum(1 for t in dq if now - t <= horizon)
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +163,12 @@ class Job:
     status: str = "pending"        # pending | running | finished | failed
     done_time: float = 0.0
     tasks: dict = dataclasses.field(default_factory=dict)
+    # incrementally maintained by the Simulator (exactly equal to scanning
+    # tasks for the matching status — the predictor reads these per decision)
+    n_finished_tasks: int = 0
+    n_failed_tasks: int = 0
+    n_finished_maps: int = 0
+    n_map_tasks: int = -1          # resolved at submit
 
     def map_tasks(self):
         return [t for t in self.tasks.values() if t.kind == MAP]
@@ -191,8 +232,17 @@ class Simulator:
         self.attempts: dict[int, Attempt] = {}
         self._next_aid = 0
         self.waiting_submits = 0
+        self.n_running_jobs = 0
         # observable signals the scheduler/ATLAS may read (JT-side knowledge)
         self.hb_failures_window: int = 0      # TT failures since last heartbeat sweep
+        # incrementally maintained node indices — the per-decision candidate
+        # generators read these instead of rebuilding list comprehensions over
+        # the whole fleet every tick (the 100-1000-node hot path).  Slot sets
+        # change only in launch/_release; known_alive changes only in
+        # detect_tt_failure/_on_heartbeat — all Simulator methods.
+        self._free_map: set = {n.nid for n in self.nodes}
+        self._free_reduce: set = {n.nid for n in self.nodes}
+        self._known_alive: set = {n.nid for n in self.nodes}
 
         scheduler.bind(self)
         for n in self.nodes:
@@ -211,7 +261,41 @@ class Simulator:
         return [n for n in self.nodes if n.tt_alive and not n.suspended]
 
     def jt_believed_alive(self):
-        return [n for n in self.nodes if n.known_alive]
+        nodes = self.nodes
+        return [nodes[i] for i in sorted(self._known_alive)]
+
+    def _sync_free(self, node: Node):
+        """Refresh the node's membership in the free-slot indices (called on
+        every running-count change — launch and release only)."""
+        nid = node.nid
+        if node.running_maps < node.spec.map_slots:
+            self._free_map.add(nid)
+        else:
+            self._free_map.discard(nid)
+        if node.running_reduces < node.spec.reduce_slots:
+            self._free_reduce.add(nid)
+        else:
+            self._free_reduce.discard(nid)
+
+    def free_nodes(self, kind: str, *, liveness: str = "jt") -> list[Node]:
+        """Nodes with a free slot of ``kind``, in nid order (deterministic
+        candidate lists), read from the incremental indices.
+
+        liveness: "jt" — the JobTracker believes them alive (scheduler view);
+        "actual" — TaskTracker up and not suspended (ATLAS's active probe);
+        "any" — slot availability only (the broker's tick-priming superset)."""
+        idx = self._free_map if kind == MAP else self._free_reduce
+        nodes = self.nodes
+        if liveness == "jt":
+            return [nodes[i] for i in sorted(idx & self._known_alive)]
+        if liveness == "actual":
+            out = []
+            for i in sorted(idx):
+                n = nodes[i]
+                if n.tt_alive and not n.suspended:
+                    out.append(n)
+            return out
+        return [nodes[i] for i in sorted(idx)]
 
     # ------------------------------------------------------------------ workload
     def submit_workload(self, jobs: list[Job]):
@@ -275,6 +359,7 @@ class Simulator:
             node.running_maps += 1
         else:
             node.running_reduces += 1
+        self._sync_free(node)
         if self.trace is not None:
             self.trace.record_launch(self, att, p_fail)
         end = fail_at if will_fail else self.now + dur
@@ -289,6 +374,7 @@ class Simulator:
             node.running_maps = max(0, node.running_maps - 1)
         else:
             node.running_reduces = max(0, node.running_reduces - 1)
+        self._sync_free(node)
         att.task.live_attempts.discard(att.aid)
 
     def _charge_resources(self, att: Attempt, ran_for: float):
@@ -307,8 +393,11 @@ class Simulator:
     def _on_submit(self, job: Job):
         self.waiting_submits -= 1
         job.status = "running"
+        self.n_running_jobs += 1
         self.jobs[job.jid] = job
-        for t in job.map_tasks():
+        maps = job.map_tasks()
+        job.n_map_tasks = len(maps)
+        for t in maps:
             t.first_submit = self.now
             self.pending.append(t.key)
         # reduces become runnable once all maps finish (coarse barrier, as in the
@@ -317,7 +406,7 @@ class Simulator:
             self.trace.record_job_submit(self, job)
 
     def _maybe_release_reduces(self, job: Job):
-        if all(t.status == "finished" for t in job.map_tasks()):
+        if job.n_finished_maps == job.n_map_tasks:
             for t in job.reduce_tasks():
                 if t.status == "pending" and not t.first_submit:
                     t.first_submit = self.now
@@ -344,7 +433,7 @@ class Simulator:
             if not (att.speculative and task.live_attempts):
                 task.failed_attempts += 1
             node.failed_count += 1
-            node.recent_failures.append(self.now)
+            node.record_failure(self.now)
             if self.trace is not None:
                 self.trace.record_outcome(self, att, False)
             self._task_attempt_failed(task)
@@ -373,6 +462,10 @@ class Simulator:
         task.status = "finished"
         task.finished_attempts += 1
         task.done_time = self.now
+        job_of = self.jobs[task.job_id]
+        job_of.n_finished_tasks += 1
+        if task.kind == MAP:
+            job_of.n_finished_maps += 1
         # kill outstanding speculative copies
         for aid in list(task.live_attempts):
             a = self.attempts[aid]
@@ -388,14 +481,17 @@ class Simulator:
         task.status = "failed"
         task.done_time = self.now
         job = self.jobs[task.job_id]
+        job.n_failed_tasks += 1
         if job.status == "running":
             job.status = "failed"
             job.done_time = self.now
+            self.n_running_jobs -= 1
             # map failure cascades to dependent reduces (paper Fig. 2)
             for t in job.tasks.values():
                 if t.status in ("pending", "running"):
                     t.status = "failed"
                     t.done_time = self.now
+                    job.n_failed_tasks += 1
                     for aid in list(t.live_attempts):
                         a = self.attempts[aid]
                         a.status = "killed"
@@ -418,9 +514,10 @@ class Simulator:
     def _maybe_finish_job(self, job: Job):
         if job.status != "running":
             return
-        if all(t.status == "finished" for t in job.tasks.values()):
+        if job.n_finished_tasks == len(job.tasks):
             job.status = "finished"
             job.done_time = self.now
+            self.n_running_jobs -= 1
             if self.trace is not None:
                 self.trace.record_job_end(self, job)
             # release next job of a sequential chain
@@ -436,6 +533,7 @@ class Simulator:
         if not node.known_alive:
             return
         node.known_alive = False
+        self._known_alive.discard(node.nid)
         self.hb_failures_window += 1
         for aid in list(node.running):
             att = self.attempts[aid]
@@ -445,7 +543,7 @@ class Simulator:
             if not (att.speculative and att.task.live_attempts):
                 att.task.failed_attempts += 1
             node.failed_count += 1
-            node.recent_failures.append(self.now)
+            node.record_failure(self.now)
             if self.trace is not None:
                 self.trace.record_outcome(self, att, False)
             self._task_attempt_failed(att.task)
@@ -456,6 +554,7 @@ class Simulator:
             node.last_heartbeat = self.now
             if not node.known_alive:
                 node.known_alive = True
+                self._known_alive.add(nid)
         else:
             self.detect_tt_failure(node)
         self.scheduler.on_heartbeat(node)
@@ -475,7 +574,7 @@ class Simulator:
                         self._charge_resources(att, self.now - att.start)
                         task.failed_attempts += 1
                         att.node.failed_count += 1
-                        att.node.recent_failures.append(self.now)
+                        att.node.record_failure(self.now)
                         if self.trace is not None:
                             self.trace.record_outcome(self, att, False)
                 self._task_attempt_failed(task)
@@ -511,7 +610,7 @@ class Simulator:
     def _done(self) -> bool:
         if self.waiting_submits > 0 or self.pending:
             return False
-        if any(j.status == "running" for j in self.jobs.values()):
+        if self.n_running_jobs > 0:
             return False
         if any(self.blocked_chains.values()):
             return False

@@ -38,20 +38,26 @@ FEATURE_NAMES = [
 N_FEATURES = len(FEATURE_NAMES)
 
 
-def attempt_features(sim, task, node, speculative: bool) -> np.ndarray:
+def attempt_features(sim, task, node, speculative: bool,
+                     out: np.ndarray | None = None) -> np.ndarray:
     """Feature vector for (task -> node) at time sim.now.  Everything here is
-    JobTracker-observable (no hidden sim state)."""
+    JobTracker-observable (no hidden sim state).
+
+    Job-level finished/failed counts read the simulator's incrementally
+    maintained counters (exactly equal to scanning ``job.tasks``) so building
+    a row is O(1) in job size — this runs once per scored placement, the
+    hottest per-decision loop in the repo.  ``out`` writes the row into a
+    caller-provided float32 buffer row (columnar append) instead of
+    allocating."""
     job = sim.jobs[task.job_id]
     jt = job.jtype
-    fin = sum(1 for t in job.tasks.values() if t.status == "finished")
-    fail = sum(1 for t in job.tasks.values() if t.status == "failed")
     total_slots = node.spec.map_slots + node.spec.reduce_slots
     free = node.free_map_slots() + node.free_reduce_slots()
     local = 1.0 if (task.kind == "reduce" or node.nid in task.block_nodes) else 0.0
     # RTT proxy: degraded network AND a degraded TaskTracker process both inflate
     # the observed heartbeat round-trip (the JT genuinely sees this)
     rtt = (1.0 / max(node.net_quality, 0.05)) * (1.0 + 0.8 * (1.0 - node.health))
-    return np.array([
+    vals = (
         1.0 if task.kind == "reduce" else 0.0,
         float(job.priority - task.penalty),
         local,
@@ -59,7 +65,8 @@ def attempt_features(sim, task, node, speculative: bool) -> np.ndarray:
         float(task.finished_attempts),
         float(task.failed_attempts),
         float(task.reschedules),
-        float(fin), float(fail), float(len(job.tasks)),
+        float(job.n_finished_tasks), float(job.n_failed_tasks),
+        float(len(job.tasks)),
         float(len(node.running)),
         float(node.finished_count),
         float(node.recent_failure_count(sim.now)),
@@ -72,7 +79,11 @@ def attempt_features(sim, task, node, speculative: bool) -> np.ndarray:
         1.0 if jt == "wordcount" else 0.0,
         1.0 if jt == "teragen" else 0.0,
         1.0 if jt == "terasort" else 0.0,
-    ], dtype=np.float32)
+    )
+    if out is None:
+        return np.array(vals, dtype=np.float32)
+    out[:] = vals
+    return out
 
 
 @dataclasses.dataclass

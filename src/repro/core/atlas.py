@@ -188,14 +188,10 @@ class ATLASScheduler(Scheduler):
 
     # ------------------------------------------------------------------ helpers
     def _free_alive_nodes(self, task):
-        out = []
-        for n in self.sim.nodes:
-            if not (n.tt_alive and not n.suspended):
-                continue
-            free = n.free_map_slots() if task.kind == MAP else n.free_reduce_slots()
-            if free > 0:
-                out.append(n)
-        return out
+        # ATLAS's active probe view: actually-up nodes with a free slot, read
+        # from the simulator's incremental free-slot index (1000-node fleets
+        # call this per decision)
+        return self.sim.free_nodes(task.kind, liveness="actual")
 
     def _enough_resources(self, task, n_free: int) -> bool:
         # spare capacity beyond what the normal queue needs right now: multi-

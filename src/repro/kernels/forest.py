@@ -25,7 +25,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, sel_ref, thr_ref, path_ref, leaves_ref, o_ref, *,
@@ -94,3 +96,119 @@ def forest_infer(x, feat_idx, thresholds, leaves, *, block_b=256, interpret=Fals
         interpret=interpret,
     )(xp, sel, thresholds.astype(jnp.float32), path, leaves.astype(jnp.float32))
     return out[:B]
+
+
+# ---------------------------------------------------------------------------
+# Grouped (block-diagonal) variant: many models, one padded block layout
+# ---------------------------------------------------------------------------
+#
+# The serving broker flushes requests from MANY independently trained forests
+# at once.  The grouped kernel takes the same packed block layout the numpy
+# path uses (ml.forest.pack_forests): per-model selector / threshold / leaf
+# blocks stacked into one padded (M, ...) tensor, rows stacked segment-by-
+# segment.  The grid walks (model-segment, batch-tile) pairs flattened into
+# tiles; a scalar-prefetched tile->segment map lets each tile's BlockSpec DMA
+# exactly its own model's blocks into VMEM — no row is ever scored against
+# trees it doesn't belong to, and no gather appears anywhere (the selector
+# matmul + select-product trick of the single-model kernel, per segment).
+
+
+def _grouped_kernel(seg_ref, x_ref, sel_ref, thr_ref, path_ref, leaves_ref,
+                    invt_ref, o_ref, *, T: int, D: int):
+    del seg_ref  # consumed by the BlockSpec index maps
+    x = x_ref[...].astype(jnp.float32)            # (Bb, F)
+    sel = sel_ref[0].astype(jnp.float32)          # (F, T*D) this tile's model
+    g = jax.lax.dot_general(x, sel, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Bb, T*D)
+    thr = thr_ref[...].astype(jnp.float32).reshape(1, T * D)
+    bits = (g > thr).astype(jnp.float32).reshape(-1, T, D)       # (Bb, T, D)
+
+    n_leaves = 1 << D
+    path = path_ref[...].astype(jnp.float32)      # (n_leaves, D)
+    onehot = jnp.ones((bits.shape[0], T, n_leaves), jnp.float32)
+    for d in range(D):
+        b_d = bits[:, :, d][:, :, None]
+        p_d = path[:, d][None, None, :]
+        onehot = onehot * (b_d * p_d + (1.0 - b_d) * (1.0 - p_d))
+
+    leaves = leaves_ref[...].astype(jnp.float32).reshape(T * n_leaves, 1)
+    score = jax.lax.dot_general(
+        onehot.reshape(-1, T * n_leaves), leaves, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (Bb, 1)
+    # padded trees have all-zero leaves -> contribute exactly 0; divide by the
+    # segment's TRUE tree count (scalar block per tile)
+    o_ref[...] = (score[:, 0] * invt_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _grouped_call(seg_of_tile, xp, sel, thr, path, leaves, inv_t, *,
+                  block_b: int, interpret: bool):
+    n_tiles = xp.shape[0] // block_b
+    F = xp.shape[1]
+    M, T, D = thr.shape
+    n_leaves = 1 << D
+    kernel = functools.partial(_grouped_kernel, T=T, D=D)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((block_b, F), lambda i, seg: (i, 0)),
+            pl.BlockSpec((1, F, T * D), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, T, D), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((n_leaves, D), lambda i, seg: (0, 0)),
+            pl.BlockSpec((1, T, n_leaves), lambda i, seg: (seg[i], 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, seg: (seg[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i, seg: (i,)),
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0],), jnp.float32),
+        interpret=interpret,
+    )(seg_of_tile, xp, sel, thr, path, leaves, inv_t)
+
+
+def forest_infer_grouped(x, seg_sizes, feat_idx, thresholds, leaves, n_trees,
+                         *, block_b: int = 128, interpret: bool = False):
+    """Grouped block-diagonal forest inference.
+
+    x: (R, F) rows stacked segment-by-segment (segment m = seg_sizes[m] rows);
+    feat_idx/thresholds: (M, T, D) padded model blocks; leaves: (M, T, 2^D);
+    n_trees: (M,) true tree counts.  Returns (R,) mean-leaf scores where each
+    row is scored only by its own model's trees."""
+    x = np.asarray(x, np.float32)
+    seg_sizes = np.asarray(seg_sizes, np.int64)
+    R, F = x.shape
+    M, T, D = np.asarray(thresholds).shape
+
+    # host-side tile layout: every segment padded up to a block_b multiple so
+    # a tile never straddles two models; tile->segment map is scalar-prefetched
+    tiles_per_seg = np.maximum(1, -(-seg_sizes // block_b))
+    n_tiles = int(tiles_per_seg.sum())
+    xp = np.zeros((n_tiles * block_b, F), np.float32)
+    seg_of_tile = np.empty(n_tiles, np.int32)
+    src = dst = tile = 0
+    spans = []
+    for m, b in enumerate(seg_sizes):
+        b = int(b)
+        spans.append((dst, dst + b, src, src + b))
+        xp[dst:dst + b] = x[src:src + b]
+        nt = int(tiles_per_seg[m])
+        seg_of_tile[tile:tile + nt] = m
+        src += b
+        dst += nt * block_b
+        tile += nt
+
+    sel = jax.vmap(lambda f: _selector(f, F))(
+        jnp.asarray(feat_idx).reshape(M, T * D))               # (M, F, T*D)
+    path = _path_bits(D)
+    inv_t = (1.0 / np.asarray(n_trees, np.float32))[:, None]   # (M, 1)
+    out = np.asarray(_grouped_call(
+        jnp.asarray(seg_of_tile), jnp.asarray(xp), sel,
+        jnp.asarray(thresholds, jnp.float32), path,
+        jnp.asarray(leaves, jnp.float32), jnp.asarray(inv_t),
+        block_b=block_b, interpret=interpret))
+    scores = np.empty(R, np.float32)
+    for ds, de, ss, se in spans:
+        scores[ss:se] = out[ds:de]
+    return scores

@@ -73,3 +73,24 @@ def forest_infer(x, feat_idx, thresholds, leaves, *, impl=None):
     from repro.kernels import forest as fk
     return fk.forest_infer(x, feat_idx, thresholds, leaves,
                            interpret=(impl == "interpret"))
+
+
+def forest_infer_grouped(x, seg_sizes, feat_idx, thresholds, leaves, n_trees,
+                         *, impl=None):
+    """Block-diagonal grouped forest inference over the packed multi-model
+    layout (see ml.forest.pack_forests); rows stacked segment-by-segment."""
+    import numpy as np
+
+    impl = _resolve(impl)
+    if impl == "xla":
+        import jax.numpy as jnp
+        seg_ids = np.repeat(np.arange(len(seg_sizes), dtype=np.int32),
+                            np.asarray(seg_sizes))
+        return ref.forest_infer_grouped_ref(
+            jnp.asarray(x, jnp.float32), jnp.asarray(seg_ids),
+            jnp.asarray(feat_idx), jnp.asarray(thresholds),
+            jnp.asarray(leaves), jnp.asarray(n_trees))
+    from repro.kernels import forest as fk
+    return fk.forest_infer_grouped(x, seg_sizes, feat_idx, thresholds,
+                                   leaves, n_trees,
+                                   interpret=(impl == "interpret"))

@@ -459,3 +459,27 @@ def forest_infer_ref(x, feat_idx, thresholds, leaves):
     vals = jnp.take_along_axis(leaves.astype(jnp.float32)[None].repeat(B, 0),
                                leaf_idx[..., None], axis=2)[..., 0]
     return vals.mean(axis=1)
+
+
+def forest_infer_grouped_ref(x, seg_ids, feat_idx, thresholds, leaves,
+                             n_trees):
+    """Block-diagonal grouped oracle: row r reads only model seg_ids[r]'s block.
+
+    x: (R, F) rows stacked segment-by-segment; seg_ids: (R,) int32 model index
+    per row; feat_idx/thresholds: (M, T, D) padded blocks (+inf thresholds on
+    padded levels -> bits False); leaves: (M, T, 2^D) zero-padded (padded
+    trees contribute exactly 0 to the sum); n_trees: (M,) true per-model tree
+    counts.  Output: (R,) per-row mean leaf value over the row's own model."""
+    R, F = x.shape
+    M, T, D = feat_idx.shape
+    L = leaves.shape[2]
+    xf = x.astype(jnp.float32)
+    fi = feat_idx.reshape(M, T * D)[seg_ids]                    # (R, T*D)
+    th = thresholds.reshape(M, T * D)[seg_ids].astype(jnp.float32)
+    g = jnp.take_along_axis(xf, fi, axis=1)
+    bits = (g > th).astype(jnp.int32).reshape(R, T, D)
+    weights = (2 ** jnp.arange(D - 1, -1, -1, dtype=jnp.int32))
+    leaf_idx = (bits * weights[None, None, :]).sum(-1)          # (R, T)
+    flat = (seg_ids[:, None] * T + jnp.arange(T)[None, :]) * L + leaf_idx
+    vals = leaves.astype(jnp.float32).reshape(-1)[flat]         # (R, T)
+    return vals.sum(axis=1) / n_trees[seg_ids].astype(jnp.float32)

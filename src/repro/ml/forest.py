@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -211,66 +212,208 @@ def forest_predict_np(params: ForestParams, X: np.ndarray,
     return _mean_over_trees(_leaf_votes_np(fi, th, lv, x))
 
 
-def forest_predict_grouped(groups) -> tuple[list, int]:
-    """One fused inference pass over many (ForestParams, X) groups.
+# ---------------------------------------------------------------------------
+# Block-diagonal grouped inference: the serving-path hot loop
+# ---------------------------------------------------------------------------
+
+# Below this many total rows a fused flush stays on the numpy block-diagonal
+# pass under impl="auto"; above it the packed layout ships to the XLA/Pallas
+# grouped kernel (one device pass for the whole flush).
+GROUPED_KERNEL_ROWS = 512
+
+
+@dataclasses.dataclass
+class PackedForests:
+    """Many forests packed into one padded block-diagonal tensor layout.
+
+    All models of a flush are padded to a common (T, D): padded levels test
+    feature 0 against +inf (bits identically False), padded trees have all-zero
+    leaves.  A model of true depth d stores leaf ``l`` at index ``l << (D-d)``
+    so the padded bit/weight arithmetic lands on exactly the original leaf
+    value — votes for real trees are bit-identical to the unpadded model.
+
+    The same layout feeds both the numpy pass (``_leaf_votes_blockdiag``) and
+    the grouped Pallas kernel (``kernels.forest.forest_infer_grouped``)."""
+    feat_idx: np.ndarray    # (M, T, D) int32, zero-padded
+    thresholds: np.ndarray  # (M, T, D) float32, +inf-padded
+    leaves: np.ndarray      # (M, T, 2^D) float32, zero-padded / shifted
+    n_trees: np.ndarray     # (M,) int32 true per-model tree counts
+
+
+def pack_forests(params_list) -> PackedForests:
+    """Pack per-model (T_m, D_m) forests into one padded (M, T, D) block."""
+    M = len(params_list)
+    T = max(p.feat_idx.shape[0] for p in params_list)
+    D = max(p.feat_idx.shape[1] for p in params_list)
+    if D > 24:
+        raise ValueError(f"depth {D} > 24 breaks exact float32 leaf indexing")
+    fi = np.zeros((M, T, D), np.int32)
+    th = np.full((M, T, D), np.inf, np.float32)
+    lv = np.zeros((M, T, 1 << D), np.float32)
+    n_trees = np.empty(M, np.int32)
+    for m, p in enumerate(params_list):
+        t, d = p.feat_idx.shape
+        fi[m, :t, :d] = p.feat_idx
+        th[m, :t, :d] = p.thresholds
+        lv[m, :t][:, np.arange(1 << d) << (D - d)] = p.leaves
+        n_trees[m] = t
+    return PackedForests(fi, th, lv, n_trees)
+
+
+# Flush-to-flush the broker scores the same model set, so the padded blocks
+# are cached by model identity (strong refs in the value keep the id()s from
+# being recycled while an entry is alive).  Flushes can run concurrently from
+# independent brokers, so mutation is locked.
+_PACK_CACHE: dict[tuple, tuple[list, PackedForests]] = {}
+_PACK_CACHE_MAX = 32
+_PACK_LOCK = threading.Lock()
+
+
+def _packed_for(params_list) -> PackedForests:
+    key = tuple(id(p) for p in params_list)
+    with _PACK_LOCK:
+        hit = _PACK_CACHE.get(key)
+        if hit is not None and all(a is b for a, b in
+                                   zip(hit[0], params_list)):
+            return hit[1]
+    packed = pack_forests(params_list)
+    with _PACK_LOCK:
+        if len(_PACK_CACHE) >= _PACK_CACHE_MAX:
+            _PACK_CACHE.pop(next(iter(_PACK_CACHE)), None)
+        _PACK_CACHE[key] = (list(params_list), packed)
+    return packed
+
+
+def _leaf_votes_blockdiag(packed: PackedForests, x: np.ndarray,
+                          seg_ids: np.ndarray) -> np.ndarray:
+    """Per-(row, tree) leaf values where row r reads ONLY model seg_ids[r]'s
+    block: (R, T) float32.  Every step is per-row (gather, compare, exact
+    power-of-two dot, gather), so votes for row r are bit-identical to
+    ``_leaf_votes_np`` on r's own model — no row is scored against trees it
+    doesn't belong to, which is what makes the pass O(Σ B_m x T) instead of
+    O(ΣB x ΣT)."""
+    M, T, D = packed.feat_idx.shape
+    L = packed.leaves.shape[2]
+    R = x.shape[0]
+    fi = packed.feat_idx.reshape(M, T * D)
+    th = packed.thresholds.reshape(M, T * D)
+    g = np.take_along_axis(x, fi[seg_ids], axis=1)              # (R, T*D)
+    bits = g > th[seg_ids]
+    weights = (1 << np.arange(D - 1, -1, -1)).astype(np.float32)
+    leaf_idx = (bits.reshape(R * T, D).astype(np.float32) @ weights) \
+        .astype(np.intp).reshape(R, T)
+    flat = (seg_ids[:, None] * T + np.arange(T)[None, :]) * L + leaf_idx
+    return packed.leaves.reshape(-1).take(flat)
+
+
+def forest_predict_grouped(groups, *, impl: str = "numpy") -> tuple[list, int]:
+    """One block-diagonal inference pass over many (ForestParams, X) groups.
 
     The serving broker flushes every queued prediction request — possibly from
-    many independently trained predictors — as a single vectorised pass: all
-    rows are gathered / compared / leaf-indexed against the stacked forest
-    once, then each row block averages only its own model's tree block.
-    Because the tree mean accumulates in a fixed order (``_mean_over_trees``)
-    and every other step is per-row, each row's probability is bit-identical
-    to ``forest_predict_np(its_params, its_rows)`` regardless of which other
-    groups share the flush.
+    many independently trained predictors — as a single pass: rows are stacked
+    segment-by-segment (one segment per distinct model), the models' tree
+    blocks are packed into one padded tensor (``pack_forests``), and each row
+    is gathered / compared / leaf-indexed against ONLY its own segment's
+    block.  Because the tree mean accumulates in a fixed order
+    (``_mean_over_trees``) over each model's true tree count and every other
+    step is per-row, each row's probability is bit-identical to
+    ``forest_predict_np(its_params, its_rows)`` regardless of which other
+    groups share the flush — and regardless of the padded tail.
 
-    Returns ``(outs, n_passes)``: one score array per group, and the number of
-    fused passes actually issued (one per distinct (T, D, 2^D) shape).  Groups
-    that reference the *same* ForestParams object share one tree block, so a
-    saturated flush of many requests against one model costs one model's worth
-    of trees, not one per request.
+    Returns ``(outs, n_passes)``: one score array per group and the number of
+    fused passes issued — one for the whole flush (heterogeneous model shapes
+    included; they pad into the same block).  Groups that reference the *same*
+    ForestParams object share one segment, so a saturated flush of many
+    requests against one model costs one model's worth of trees.
 
-    Trade-off: within a shape bucket every row is scored against every
-    model's trees (O(ΣB x ΣT)) and the off-model blocks are discarded.  At
-    broker flush sizes (tens of rows, tens of models) this one vectorised
-    pass is cheaper than per-model numpy calls, whose fixed per-call overhead
-    dominates; block-diagonal evaluation only starts winning when rows x
-    models grows far past that regime (see ROADMAP open items)."""
+    impl: "numpy" (default — strict bit-parity), "auto" (numpy below
+    ``GROUPED_KERNEL_ROWS`` total rows, the XLA/Pallas grouped kernel above),
+    or an explicit kernel impl ("xla"/"pallas"/"interpret") to force the
+    packed device pass (kernel tree means round differently at the last ulp).
+    """
     outs: list = [None] * len(groups)
     by_params: dict[int, list[int]] = {}      # id(params) -> group indices
     params_of: dict[int, ForestParams] = {}
+    counts: dict[int, int] = {}
+    order: list[int] = []                     # pids in first-appearance order
+    total = 0
     for i, (params, X) in enumerate(groups):
         if X.shape[0] == 0:
             outs[i] = np.zeros(0, np.float32)
             continue
-        by_params.setdefault(id(params), []).append(i)
-        params_of[id(params)] = params
-    shape_buckets: dict[tuple, list[int]] = {}
-    for pid, p in params_of.items():
-        shape_buckets.setdefault(
-            (p.feat_idx.shape, p.leaves.shape), []).append(pid)
-    n_passes = 0
-    for pids in shape_buckets.values():
-        n_passes += 1
-        fi = np.concatenate([params_of[p].feat_idx for p in pids])
-        th = np.concatenate([params_of[p].thresholds for p in pids])
-        lv = np.concatenate([params_of[p].leaves for p in pids])
-        x = np.concatenate([np.asarray(groups[i][1], np.float32)
-                            for p in pids for i in by_params[p]])
-        votes = _leaf_votes_np(fi, th, lv, x)                  # (ΣB, ΣT)
-        T = params_of[pids[0]].feat_idx.shape[0]
-        r = 0
-        for j, p in enumerate(pids):
-            rows = sum(groups[i][1].shape[0] for i in by_params[p])
-            # one fixed-order mean per model block (per-row arithmetic: the
-            # result is identical however the block is later sliced up)
-            block = _mean_over_trees(votes[r:r + rows, j * T:(j + 1) * T])
-            r += rows
-            o = 0
-            for i in by_params[p]:
+        pid = id(params)
+        if pid not in by_params:
+            by_params[pid] = []
+            params_of[pid] = params
+            counts[pid] = 0
+            order.append(pid)
+        by_params[pid].append(i)
+        counts[pid] += X.shape[0]
+        total += X.shape[0]
+    if not total:
+        return outs, 0
+
+    # columnar row assembly: one preallocated block, segments contiguous
+    first = groups[by_params[order[0]][0]][1]
+    group_span: list = [None] * len(groups)
+    seg_start: dict[int, int] = {}
+    if len(by_params) == 1 and len(by_params[order[0]]) == 1:
+        # one model, one row block (e.g. a broker column view): use it as-is
+        i = by_params[order[0]][0]
+        x = np.ascontiguousarray(first, np.float32)
+        group_span[i] = (0, total)
+        seg_start[order[0]] = 0
+    else:
+        x = np.empty((total, first.shape[1]), np.float32)
+        pos = 0
+        for pid in order:
+            seg_start[pid] = pos
+            for i in by_params[pid]:
                 b = groups[i][1].shape[0]
-                outs[i] = block[o:o + b]
-                o += b
-    return outs, n_passes
+                x[pos:pos + b] = groups[i][1]
+                group_span[i] = (pos, pos + b)
+                pos += b
+
+    use_kernel = impl not in ("numpy", "auto") or (
+        impl == "auto" and total > GROUPED_KERNEL_ROWS)
+    if use_kernel:
+        from repro.kernels import ops
+        packed = _packed_for([params_of[p] for p in order])
+        seg_sizes = np.asarray([counts[p] for p in order], np.int32)
+        kernel_impl = None if impl == "auto" else impl
+        scores = np.asarray(ops.forest_infer_grouped(
+            x, seg_sizes, packed.feat_idx, packed.thresholds, packed.leaves,
+            packed.n_trees, impl=kernel_impl), np.float32)
+        for i, span in enumerate(group_span):
+            if span is not None:
+                outs[i] = scores[span[0]:span[1]]
+        return outs, 1
+
+    if len(order) == 1:
+        # single model: the existing numpy mirror (shared tree block over the
+        # stacked rows) — same arithmetic, no per-row index plumbing
+        p = params_of[order[0]]
+        votes = _leaf_votes_np(p.feat_idx, p.thresholds, p.leaves, x)
+        means = {order[0]: _mean_over_trees(votes)}
+    else:
+        packed = _packed_for([params_of[p] for p in order])
+        seg_ids = np.repeat(np.arange(len(order), dtype=np.intp),
+                            [counts[p] for p in order])
+        votes = _leaf_votes_blockdiag(packed, x, seg_ids)      # (R, T_pad)
+        means = {}
+        for m, pid in enumerate(order):
+            s = seg_start[pid]
+            t = params_of[pid].feat_idx.shape[0]
+            # fixed-order mean over the model's TRUE tree count: the padded
+            # tail never enters the accumulation
+            means[pid] = _mean_over_trees(votes[s:s + counts[pid], :t])
+    for pid in order:
+        s = seg_start[pid]
+        block = means[pid]
+        for i in by_params[pid]:
+            gs, ge = group_span[i]
+            outs[i] = block[gs - s:ge - s]
+    return outs, 1
 
 
 def forest_predict(params: ForestParams, X: np.ndarray, *, impl: str | None = None,

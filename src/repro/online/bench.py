@@ -16,18 +16,25 @@ Row-level outputs are compared bit-for-bit across all three modes
 
   python -m repro.online.bench [--rows 6000] [--clients 12] [--workload smoke]
       [--scenario bursty_tt] [--impl numpy|auto|xla|interpret] [--rate R]
-      [--out experiments] [--stamp-sweep [PATH]] [--smoke]
+      [--fleet-sizes 0,100] [--policy barrier|depth] [--depth N]
+      [--max-delay S] [--out experiments] [--stamp-sweep [PATH]] [--smoke]
 
 ``--rate`` paces each client (requests/s of wall time, 0 = flat out).
-``--stamp-sweep`` merges the summary into SWEEP.json / SWEEP.md (the cross-PR
-perf trajectory artifact).  Exit status is non-zero when the batched run shows
-no throughput or parity breaks — ``make online-smoke`` gates CI on this."""
+``--fleet-sizes`` is the scale axis: each size replays a decision stream from
+a fleet of that many nodes (0 = the paper's 13-slave fleet; candidate-set
+requests grow with the fleet), and the per-size throughput/latency sections
+land in the summary, ``BENCH_<pr>.json`` and — with ``--stamp-sweep`` —
+``SWEEP.json``.  ``--policy depth`` serves the broker section through the
+queue-depth flush policy with bounded delay instead of the deterministic
+barrier.  Exit status is non-zero when the batched run shows no throughput or
+parity breaks — ``make bench-smoke`` gates CI on this."""
 
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import re
 import sys
 import threading
 import time
@@ -40,7 +47,15 @@ from repro.online.broker import PredictionBroker
 
 # deterministic request-size mix mimicking the scheduler's demand: mostly
 # single-proposal p_success rows, periodically a candidate-set p_success_nodes
+# (whose size tracks the fleet: every free node is a candidate placement)
 REQUEST_SIZES = (1, 1, 1, 2, 1, 1, 13, 1, 1, 4)
+
+
+def request_sizes(fleet_size: int = 0) -> tuple:
+    if not fleet_size:
+        return REQUEST_SIZES
+    cand = min(fleet_size, 256)
+    return tuple(cand if s == 13 else s for s in REQUEST_SIZES)
 
 
 # ---------------------------------------------------------------------------
@@ -48,22 +63,24 @@ REQUEST_SIZES = (1, 1, 1, 2, 1, 1, 13, 1, 1, 4)
 # ---------------------------------------------------------------------------
 
 def build_stream(workload: str = "smoke", scenario: str = "bursty_tt",
-                 seed: int = 0, min_rows: int = 2000):
+                 seed: int = 0, min_rows: int = 2000, fleet_size: int = 0):
     """(predictor, [(kind, X_request)]) from one base-scheduler fleet cell.
 
     The trace's launch-time feature rows ARE the decision stream ATLAS would
     have scored; they are tiled to ``min_rows`` and cut into requests with the
-    REQUEST_SIZES mix.  Falls back to a synthetic stream when the cell's trace
-    can't train (tiny workloads with too few outcomes of one class)."""
+    ``request_sizes(fleet_size)`` mix.  Falls back to a synthetic stream when
+    the cell's trace can't train (tiny workloads with too few outcomes of one
+    class)."""
     from repro.cluster.experiment import ExperimentConfig, run_scheduler
     from repro.cluster.fleet import cell_seed
     from repro.cluster.scenarios import scenario_chaos, workload_for_seed
 
-    env = (scenario, workload, seed)
+    env = ((scenario, workload, f"n{fleet_size}", seed) if fleet_size
+           else (scenario, workload, seed))
     cfg = ExperimentConfig(
         workload=workload_for_seed(workload, cell_seed("workload", *env)),
         chaos=scenario_chaos(scenario, cell_seed("chaos", *env)),
-        seed=cell_seed("sim", *env), min_samples=32)
+        seed=cell_seed("sim", *env), min_samples=32, fleet_size=fleet_size)
     _, trace, _ = run_scheduler("fifo", cfg, with_trace=True)
     (mx, my), (rx, ry) = trace.datasets()
     predictor = TaskPredictor(algo="R.F.", min_samples=32, seed=0)
@@ -83,9 +100,10 @@ def build_stream(workload: str = "smoke", scenario: str = "bursty_tt",
         rows = rows + rows
     rows = rows[:min_rows]
 
+    sizes = request_sizes(fleet_size)
     requests, i, s = [], 0, 0
     while i < len(rows):
-        size = REQUEST_SIZES[s % len(REQUEST_SIZES)]
+        size = sizes[s % len(sizes)]
         chunk = rows[i:i + size]
         i += size
         s += 1
@@ -131,9 +149,12 @@ def run_scalar(predictor: TaskPredictor, requests) -> dict:
 
 
 def run_broker(predictor: TaskPredictor, requests, *, clients: int = 12,
-               impl: str = "numpy", rate: float = 0.0) -> dict:
+               impl: str = "numpy", rate: float = 0.0,
+               policy: str = "barrier", depth: int = 256,
+               max_delay: float = 0.002) -> dict:
     """Concurrent clients replaying shards of the stream through one broker."""
-    broker = PredictionBroker(impl=impl)
+    broker = PredictionBroker(impl=impl, policy=policy, depth=depth,
+                              max_delay=max_delay)
     shards = [list(range(c, len(requests), clients)) for c in range(clients)]
     shards = [s for s in shards if s]
     broker.add_clients(len(shards))
@@ -181,7 +202,9 @@ def run_broker(predictor: TaskPredictor, requests, *, clients: int = 12,
             "rows_per_s": s["rows"] / max(dt, 1e-9),
             "dispatches": s["dispatches"], "flushes": s["flushes"],
             "max_flush_rows": s["max_flush_rows"],
-            "clients": len(shards), "impl": impl,
+            "clients": len(shards), "impl": impl, "policy": policy,
+            "solo_flushes": broker.n_solo_flushes,
+            "deadline_flushes": broker.n_deadline_flushes,
             "latency_ms": {"p50": pct(0.50), "p95": pct(0.95),
                            "p99": pct(0.99)},
             "outputs": outs}
@@ -229,10 +252,11 @@ def _parity(scalar: dict, *others) -> bool:
 # ---------------------------------------------------------------------------
 
 def summarize(scalar: dict, broker: dict, saturated: dict,
-              parity: bool | None) -> dict:
+              parity: bool | None, fleet_size: int = 0) -> dict:
     strip = lambda d: {k: v for k, v in d.items() if k != "outputs"}  # noqa: E731
     return {
         "pr": repro.PR_TAG,
+        "fleet_size": fleet_size,
         "scalar": strip(scalar),
         "broker": strip(broker),
         "saturated": strip(saturated),
@@ -242,6 +266,20 @@ def summarize(scalar: dict, broker: dict, saturated: dict,
         "dispatch_reduction": scalar["dispatches"]
         / max(broker["dispatches"], 1),
         "parity": parity,
+    }
+
+
+def _size_block(summary: dict) -> dict:
+    """The compact per-fleet-size perf record stamped into SWEEP/BENCH."""
+    return {
+        "batched_rows_per_s": round(summary["saturated"]["rows_per_s"], 1),
+        "broker_rows_per_s": round(summary["broker"]["rows_per_s"], 1),
+        "scalar_rows_per_s": round(summary["scalar"]["rows_per_s"], 1),
+        "speedup": round(summary["speedup"], 2),
+        "dispatch_reduction": round(summary["dispatch_reduction"], 2),
+        "latency_ms": {k: round(v, 3)
+                       for k, v in summary["broker"]["latency_ms"].items()},
+        "parity": summary["parity"],
     }
 
 
@@ -255,14 +293,13 @@ def stamp_sweep(summary: dict, sweep_json_path) -> bool:
     perf = obj.setdefault("perf", {})
     perf["online_bench"] = {
         "pr": summary["pr"],
-        "batched_rows_per_s": round(summary["saturated"]["rows_per_s"], 1),
-        "broker_rows_per_s": round(summary["broker"]["rows_per_s"], 1),
-        "scalar_rows_per_s": round(summary["scalar"]["rows_per_s"], 1),
-        "speedup": round(summary["speedup"], 2),
-        "dispatch_reduction": round(summary["dispatch_reduction"], 2),
-        "latency_ms": {k: round(v, 3)
-                       for k, v in summary["broker"]["latency_ms"].items()},
-        "parity": summary["parity"],
+        **_size_block(summary),
+        # the fleet-size scale axis: one throughput/latency block per size
+        "per_fleet_size": {
+            str(size): _size_block(s)
+            for size, s in sorted(summary.get("per_fleet_size", {}).items(),
+                                  key=lambda kv: int(kv[0]))
+        },
     }
     jp.write_text(json.dumps(obj, indent=2, sort_keys=True) + "\n")
     mp = jp.with_name("SWEEP.md")
@@ -274,32 +311,59 @@ def stamp_sweep(summary: dict, sweep_json_path) -> bool:
         cut = md.find("\n## online broker (")
         if cut != -1:
             md = md[:cut]
-        mp.write_text(md.rstrip("\n") + "\n\n"
-                      f"## online broker ({summary['pr']})\n\n"
-                      f"| scalar rows/s | batched rows/s | speedup "
-                      f"| dispatch reduction | p50 ms | p99 ms | parity |\n"
-                      "|---|---|---|---|---|---|---|\n"
-                      f"| {b['scalar_rows_per_s']:.0f} "
-                      f"| {b['batched_rows_per_s']:.0f} "
-                      f"| {b['speedup']:.1f}x | {b['dispatch_reduction']:.1f}x "
-                      f"| {b['latency_ms']['p50']:.2f} "
-                      f"| {b['latency_ms']['p99']:.2f} "
-                      f"| {b['parity']} |\n")
+
+        def row(label, blk):
+            return (f"| {label} | {blk['scalar_rows_per_s']:.0f} "
+                    f"| {blk['batched_rows_per_s']:.0f} "
+                    f"| {blk['speedup']:.1f}x "
+                    f"| {blk['dispatch_reduction']:.1f}x "
+                    f"| {blk['latency_ms']['p50']:.2f} "
+                    f"| {blk['latency_ms']['p99']:.2f} "
+                    f"| {blk['parity']} |")
+
+        lines = [md.rstrip("\n"), "",
+                 f"## online broker ({summary['pr']})", "",
+                 "| fleet | scalar rows/s | batched rows/s | speedup "
+                 "| dispatch reduction | p50 ms | p99 ms | parity |",
+                 "|---|---|---|---|---|---|---|---|"]
+        sizes = b["per_fleet_size"] or {"0": b}
+        for size, blk in sorted(sizes.items(), key=lambda kv: int(kv[0])):
+            lines.append(row("paper (13)" if size == "0" else size, blk))
+        mp.write_text("\n".join(lines) + "\n")
     return True
 
 
 def run_bench(*, rows: int = 6000, clients: int = 12, workload: str = "smoke",
               scenario: str = "bursty_tt", impl: str = "numpy",
-              rate: float = 0.0, seed: int = 0) -> dict:
+              rate: float = 0.0, seed: int = 0, fleet_size: int = 0,
+              policy: str = "barrier", depth: int = 256,
+              max_delay: float = 0.002) -> dict:
     predictor, requests = build_stream(workload=workload, scenario=scenario,
-                                       seed=seed, min_rows=rows)
+                                       seed=seed, min_rows=rows,
+                                       fleet_size=fleet_size)
     scalar = run_scalar(predictor, requests)
     broker = run_broker(predictor, requests, clients=clients, impl=impl,
-                        rate=rate)
+                        rate=rate, policy=policy, depth=depth,
+                        max_delay=max_delay)
     saturated = run_saturated(predictor, requests, impl=impl)
     parity = (_parity(scalar, broker, saturated) if impl == "numpy"
               else None)
-    return summarize(scalar, broker, saturated, parity)
+    return summarize(scalar, broker, saturated, parity, fleet_size)
+
+
+def run_bench_sizes(fleet_sizes, **kw) -> dict:
+    """The full bench at each fleet size; the first size is the primary
+    summary, every size lands under ``per_fleet_size``."""
+    sizes = list(fleet_sizes) or [0]
+    summary = None
+    per_size = {}
+    for size in sizes:
+        s = run_bench(fleet_size=size, **kw)
+        per_size[str(size)] = s
+        if summary is None:
+            summary = dict(s)     # copy: the primary also sits in per_size
+    summary["per_fleet_size"] = per_size
+    return summary
 
 
 def main(argv=None) -> int:
@@ -314,6 +378,18 @@ def main(argv=None) -> int:
                     choices=("numpy", "auto", "xla", "pallas", "interpret"))
     ap.add_argument("--rate", type=float, default=0.0,
                     help="per-client request rate (req/s, 0 = max)")
+    ap.add_argument("--fleet-sizes", default="0",
+                    help="comma list of fleet sizes to bench (0 = the "
+                         "paper's 13-slave fleet); first is the primary "
+                         "summary, all land in per_fleet_size")
+    ap.add_argument("--policy", default="barrier",
+                    choices=("barrier", "depth"),
+                    help="broker flush policy (depth = queue-depth with "
+                         "bounded delay; non-deterministic flush counts)")
+    ap.add_argument("--depth", type=int, default=256,
+                    help="queue-depth flush threshold in rows (policy=depth)")
+    ap.add_argument("--max-delay", type=float, default=0.002,
+                    help="bounded flush delay in seconds (policy=depth)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="experiments",
                     help="directory for ONLINE.json")
@@ -327,14 +403,29 @@ def main(argv=None) -> int:
     rows, clients = args.rows, args.clients
     if args.smoke:
         rows, clients = min(rows, 2000), min(clients, 12)
-    summary = run_bench(rows=rows, clients=clients, workload=args.workload,
-                        scenario=args.scenario, impl=args.impl,
-                        rate=args.rate, seed=args.seed)
+    fleet_sizes = [int(s) for s in args.fleet_sizes.split(",")]
+    summary = run_bench_sizes(
+        fleet_sizes, rows=rows, clients=clients, workload=args.workload,
+        scenario=args.scenario, impl=args.impl, rate=args.rate,
+        seed=args.seed, policy=args.policy, depth=args.depth,
+        max_delay=args.max_delay)
 
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     (out / "ONLINE.json").write_text(
         json.dumps(summary, indent=2, sort_keys=True) + "\n")
+    # per-PR perf artifact: BENCH_<n>.json accumulates the trajectory across
+    # PRs (one file per PR_TAG, re-runs overwrite their own PR's file)
+    m = re.match(r"PR(\d+)", repro.PR_TAG)
+    if m:
+        bench_art = {
+            "pr": repro.PR_TAG,
+            **_size_block(summary),
+            "per_fleet_size": {size: _size_block(s) for size, s in
+                               summary["per_fleet_size"].items()},
+        }
+        (out / f"BENCH_{m.group(1)}.json").write_text(
+            json.dumps(bench_art, indent=2, sort_keys=True) + "\n")
     b, s, f = summary["broker"], summary["scalar"], summary["saturated"]
     print(f"[online] scalar    : {s['rows']} rows, {s['dispatches']} "
           f"dispatches, {s['rows_per_s']:,.0f} rows/s "
@@ -351,6 +442,16 @@ def main(argv=None) -> int:
           f"({summary['speedup_vs_per_decision']:.1f}x vs per-decision), "
           f"dispatch reduction {summary['dispatch_reduction']:.1f}x, "
           f"parity={summary['parity']}")
+    if len(summary["per_fleet_size"]) > 1:
+        for size, s_sz in sorted(summary["per_fleet_size"].items(),
+                                 key=lambda kv: int(kv[0])):
+            blk = _size_block(s_sz)
+            label = "paper(13)" if size == "0" else size
+            print(f"[online] fleet {label:>9s}: "
+                  f"{blk['batched_rows_per_s']:>10,.0f} batched rows/s, "
+                  f"broker p50 {blk['latency_ms']['p50']:.2f} ms "
+                  f"p99 {blk['latency_ms']['p99']:.2f} ms, "
+                  f"parity={blk['parity']}")
     if args.stamp_sweep:
         if stamp_sweep(summary, args.stamp_sweep):
             print(f"[online] stamped perf into {args.stamp_sweep}")
@@ -358,9 +459,11 @@ def main(argv=None) -> int:
             print(f"[online] no {args.stamp_sweep} to stamp (run the sweep "
                   "first)")
 
-    if (summary["broker"]["rows_per_s"] <= 0
-            or summary["saturated"]["rows_per_s"] <= 0
-            or summary["parity"] is False):
+    bad = any(s_sz["broker"]["rows_per_s"] <= 0
+              or s_sz["saturated"]["rows_per_s"] <= 0
+              or s_sz["parity"] is False
+              for s_sz in summary["per_fleet_size"].values())
+    if bad:
         print("[online] FAIL: no batched throughput or parity break",
               file=sys.stderr)
         return 1

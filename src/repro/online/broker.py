@@ -8,19 +8,36 @@ Two layers, composable:
   free-slot nodes, and every later ``p_success`` / ``p_success_nodes`` in the
   tick is served from an exact-feature memo.  Misses (state moved under the
   tick — e.g. a launch consumed a slot) are flushed as their own small batch.
+  Feature rows are written into preallocated columnar buffers in place —
+  the per-request plumbing is an (offset, length) pair, not a fresh array.
 
-* ``PredictionBroker``: batches *across* clients.  Fleet ATLAS cells run
-  concurrently as broker clients; a request parks until every registered
-  client has one queued (a lock-step round), then the whole round is scored as
-  ONE fused pass over the stacked forests (``ml.forest.forest_predict_grouped``)
-  and distributed.  Rounds are a pure function of each client's request
-  sequence — no timers — so flush/dispatch counts are deterministic and a
-  brokered sweep reproduces the serial sweep byte-for-byte.
+* ``PredictionBroker``: batches *across* clients.  Requests append their rows
+  into per-model columnar buffers under the broker lock; a flush scores each
+  model's filled prefix as ONE slice of ONE block-diagonal pass
+  (``ml.forest.forest_predict_grouped``) and scatters spans back.  Two flush
+  policies:
+
+    policy="barrier"  (default) a request parks until every registered client
+                      has one queued (a lock-step round).  Rounds are a pure
+                      function of each client's request sequence — no timers —
+                      so flush/dispatch counts are deterministic and a
+                      brokered sweep reproduces the serial sweep byte-for-byte.
+                      When a single client remains (skewed wave: one long cell
+                      running solo), the round would contain exactly its own
+                      request, so ``submit`` scores it inline and skips the
+                      park/notify machinery entirely (identical accounting).
+    policy="depth"    queue-depth flush with bounded delay: flush as soon as
+                      ``depth`` rows are queued, or ``max_delay`` seconds after
+                      the first request of a batch arrived — whichever comes
+                      first.  Tail batches stay fat on skewed waves at the
+                      price of wall-clock timers (row-level outputs are still
+                      bit-identical; flush *counts* become timing-dependent,
+                      so the deterministic sweeps keep the barrier).
 
 Exactness: probabilities must not depend on how requests are batched, or
 decisions would drift between executors.  Per-row forest arithmetic is
-batch-independent by construction (fixed-order tree mean — see
-``ml.forest._mean_over_trees``), and the scalar path
+batch-independent by construction (fixed-order tree mean + block-diagonal
+segmentation — see ``ml.forest``), and the scalar path
 (``TaskPredictor.predict_batch``) pins forest-family scoring to the same
 numpy mirror at every batch size, so memo hits, primed rows, fused flushes
 and scalar calls all produce bit-identical floats for the forest family
@@ -28,10 +45,10 @@ and scalar calls all produce bit-identical floats for the forest family
 own ``predict_proba``.
 
 ``impl`` selects the flush backend: ``"numpy"`` (default — strict parity via
-the small-batch fast path), ``"auto"`` (size-dispatched: big flushes route to
-the XLA/Pallas forest kernel, trading last-ulp parity for MXU throughput), or
-an explicit kernel impl (``"xla"`` / ``"pallas"`` / ``"interpret"``).
-"""
+the block-diagonal numpy pass), ``"auto"`` (size-dispatched: fat flushes route
+to the grouped XLA/Pallas forest kernel, trading last-ulp parity for MXU
+throughput), or an explicit kernel impl (``"xla"`` / ``"pallas"`` /
+``"interpret"``)."""
 
 from __future__ import annotations
 
@@ -39,64 +56,89 @@ import threading
 
 import numpy as np
 
-from repro.cluster.telemetry import attempt_features
+from repro.cluster.telemetry import N_FEATURES, attempt_features
 from repro.core.predictor import TaskPredictor, forest_family_params
-from repro.ml.forest import SMALL_BATCH, forest_predict, forest_predict_grouped
+from repro.ml.forest import forest_predict_grouped
+
+_EMPTY = np.zeros(0, np.float32)
+
+
+class _Column:
+    """Columnar row buffer for one model: a preallocated float32 feature array
+    appended in place; a flush reads the filled prefix as one slice."""
+
+    __slots__ = ("params", "buf", "fill")
+
+    def __init__(self, params, width: int, cap: int = 256):
+        self.params = params
+        self.buf = np.empty((cap, width), np.float32)
+        self.fill = 0
+
+    def append(self, X: np.ndarray) -> int:
+        """Copy X into the buffer; returns the start offset of the span."""
+        b = X.shape[0]
+        need = self.fill + b
+        if need > self.buf.shape[0]:
+            new = np.empty((max(need, 2 * self.buf.shape[0]),
+                            self.buf.shape[1]), np.float32)
+            new[:self.fill] = self.buf[:self.fill]
+            self.buf = new
+        self.buf[self.fill:need] = X
+        start, self.fill = self.fill, need
+        return start
+
+    def view(self) -> np.ndarray:
+        return self.buf[:self.fill]
+
+    def reset(self):
+        self.fill = 0
 
 
 def score_groups(groups, impl: str = "numpy") -> tuple[list, int]:
     """Score ``[(model, X)]`` -> ``([probs], n_dispatches)``.
 
-    Requests against the same forest model are coalesced into one row block
-    (then sliced back apart — per-row arithmetic, so bit-identical to scoring
-    each request alone), and distinct forest models fuse into one pass per
-    forest shape.  Other models (and, under ``impl="auto"``, oversized row
-    blocks bound for the XLA/Pallas kernel) each cost one dispatch."""
+    Forest-family requests are appended into per-model columnar buffers and
+    scored as ONE block-diagonal pass (then sliced back apart — per-row
+    arithmetic, so bit-identical to scoring each request alone).  Other models
+    each cost one dispatch via their own ``predict_proba``.
+
+    Coalescing happens HERE even though ``forest_predict_grouped`` also
+    groups by model: handing it one contiguous column per model costs one
+    extra (vectorised, ~µs) row copy but lets the predict_proba clip run once
+    per model *block* — clipping per request would put thousands of small
+    ``np.clip`` calls right back on the saturated-flush floor this module
+    exists to remove."""
     outs: list = [None] * len(groups)
-    arrays: list = [None] * len(groups)
-    merged: dict[int, list[int]] = {}         # id(params) -> group indices
-    params_of: dict[int, object] = {}
+    cols: dict[int, _Column] = {}
+    order: list[_Column] = []
+    spans: list = []                          # (group idx, column, start, stop)
     n = 0
     for i, (model, X) in enumerate(groups):
         X = np.asarray(X, np.float32)
-        arrays[i] = X
         if X.shape[0] == 0:
-            outs[i] = np.zeros(0, np.float32)
+            outs[i] = _EMPTY
             continue
         params = forest_family_params(model)
         if params is None:
             outs[i] = np.asarray(model.predict_proba(X), np.float32)
             n += 1
             continue
-        merged.setdefault(id(params), []).append(i)
-        params_of[id(params)] = params
-
-    def scatter(idxs, block):
-        o = 0
-        for i in idxs:
-            b = arrays[i].shape[0]
-            outs[i] = block[o:o + b]
-            o += b
-
-    fuse: list[tuple[list, object, np.ndarray]] = []
-    for pid, idxs in merged.items():
-        X = (arrays[idxs[0]] if len(idxs) == 1 else
-             np.concatenate([arrays[i] for i in idxs]))
-        params = params_of[pid]
-        if impl == "numpy" or (impl == "auto" and X.shape[0] <= SMALL_BATCH):
-            fuse.append((idxs, params, X))
-        else:
-            kernel_impl = None if impl == "auto" else impl
-            n += 1
-            scatter(idxs, np.clip(
-                forest_predict(params, X, impl=kernel_impl),
-                0.0, 1.0).astype(np.float32))
-    if fuse:
-        raw, passes = forest_predict_grouped([(p, X) for _, p, X in fuse])
+        col = cols.get(id(params))
+        if col is None:
+            col = cols[id(params)] = _Column(params, X.shape[1])
+            order.append(col)
+        start = col.append(X)
+        spans.append((i, col, start, start + X.shape[0]))
+    if order:
+        raw, passes = forest_predict_grouped(
+            [(c.params, c.view()) for c in order], impl=impl)
         n += passes
-        for (idxs, _, _), scores in zip(fuse, raw):
-            # same clip the forest models apply in predict_proba
-            scatter(idxs, np.clip(scores, 0.0, 1.0).astype(np.float32))
+        # same clip the forest models apply in predict_proba (elementwise,
+        # so clipping the block then slicing == slicing then clipping)
+        blocks = {id(c): np.clip(r, 0.0, 1.0).astype(np.float32)
+                  for c, r in zip(order, raw)}
+        for i, col, s, e in spans:
+            outs[i] = blocks[id(col)][s:e]
     return outs, n
 
 
@@ -111,24 +153,35 @@ class _Pending:
 
 
 class PredictionBroker:
-    """Cross-client batching server with a deterministic barrier flush.
+    """Cross-client batching server with barrier or queue-depth flushes.
 
-    Clients are registered up front (``add_clients``) so round membership
-    never depends on thread start-up timing; each client calls ``done()``
-    (in a ``finally``) when its run completes.  ``submit`` blocks until the
-    round containing the request is flushed."""
+    Clients are registered up front (``add_clients``) so barrier-round
+    membership never depends on thread start-up timing; each client calls
+    ``done()`` (in a ``finally``) when its run completes.  ``submit`` blocks
+    until the flush containing the request completes."""
 
-    def __init__(self, impl: str = "numpy"):
+    def __init__(self, impl: str = "numpy", policy: str = "barrier",
+                 depth: int = 256, max_delay: float = 0.002):
+        if policy not in ("barrier", "depth"):
+            raise ValueError(f"unknown flush policy {policy!r}")
         self.impl = impl
+        self.policy = policy
+        self.depth = depth
+        self.max_delay = max_delay
         self._cv = threading.Condition()
         self._queue: list[_Pending] = []
+        self._queued_rows = 0
         self._clients = 0
+        self._timer: threading.Timer | None = None
+        self._timer_gen = 0
         # accounting
         self.n_flushes = 0
         self.n_dispatches = 0
         self.n_rows = 0
         self.n_requests = 0
         self.max_flush_rows = 0
+        self.n_solo_flushes = 0
+        self.n_deadline_flushes = 0
 
     # ------------------------------------------------------------ lifecycle
     def add_clients(self, n: int = 1):
@@ -140,30 +193,78 @@ class PredictionBroker:
         must not hold the barrier open for it."""
         with self._cv:
             self._clients -= 1
-            if self._queue and len(self._queue) >= max(self._clients, 1):
+            if self.policy == "barrier" and self._queue \
+                    and len(self._queue) >= max(self._clients, 1):
                 self._flush_locked()
 
     # ------------------------------------------------------------ serving
     def submit(self, groups) -> list:
-        """Block until this request's round flushes; returns one probability
+        """Block until this request's flush completes; returns one probability
         array per (model, X) group."""
         if not groups:
             return []
-        p = _Pending(groups)
         with self._cv:
             self.n_requests += 1
+            if self.policy == "barrier" and self._clients <= 1 \
+                    and not self._queue:
+                # solo client: a barrier round would contain exactly this one
+                # request — score it inline (identical flush accounting)
+                # instead of paying the park/notify machinery per request
+                self.n_solo_flushes += 1
+                return self._score_direct(groups)
+            p = _Pending(groups)
             self._queue.append(p)
-            if len(self._queue) >= max(self._clients, 1):
+            self._queued_rows += sum(np.asarray(X).shape[0]
+                                     for _, X in groups)
+            if self._should_flush():
                 self._flush_locked()
+            elif self.policy == "depth" and self._timer is None:
+                self._arm_timer()
             while not p.done:
                 self._cv.wait()
         if p.error is not None:
             raise p.error
         return p.outs
 
+    def _should_flush(self) -> bool:
+        if self.policy == "barrier":
+            return len(self._queue) >= max(self._clients, 1)
+        return self._queued_rows >= self.depth
+
+    # ------------------------------------------------------------ depth timer
+    def _arm_timer(self):
+        self._timer_gen += 1
+        gen = self._timer_gen
+        t = threading.Timer(self.max_delay, self._deadline_flush, args=(gen,))
+        t.daemon = True
+        self._timer = t
+        t.start()
+
+    def _deadline_flush(self, gen: int):
+        with self._cv:
+            if gen != self._timer_gen:
+                return                        # a depth flush beat the clock
+            self._timer = None
+            if self._queue:
+                self.n_deadline_flushes += 1
+                self._flush_locked()
+
+    # ------------------------------------------------------------ flushing
+    def _score_direct(self, groups) -> list:
+        outs, n = score_groups(groups, impl=self.impl)
+        rows = sum(np.asarray(X).shape[0] for _, X in groups)
+        self.n_flushes += 1
+        self.n_dispatches += n
+        self.n_rows += rows
+        self.max_flush_rows = max(self.max_flush_rows, rows)
+        return outs
+
     def _flush_locked(self):
         batch = self._queue
         self._queue = []
+        self._queued_rows = 0
+        self._timer_gen += 1                  # invalidate any pending timer
+        self._timer = None
         flat = [g for p in batch for g in p.groups]
         try:
             outs, n = score_groups(flat, impl=self.impl)
@@ -185,9 +286,15 @@ class PredictionBroker:
             self._cv.notify_all()
 
     def stats(self) -> dict:
+        # deterministic counters only: whether a given flush fired via the
+        # solo bypass or a done()-triggered round (and whether a depth flush
+        # beat its deadline timer) depends on thread interleaving, so the
+        # cause counters (n_solo_flushes / n_deadline_flushes) stay off the
+        # byte-stable SWEEP perf block and are read as attributes instead
         return {"flushes": self.n_flushes, "dispatches": self.n_dispatches,
                 "rows": self.n_rows, "requests": self.n_requests,
-                "max_flush_rows": self.max_flush_rows}
+                "max_flush_rows": self.max_flush_rows,
+                "policy": self.policy}
 
 
 class BrokerPredictor(TaskPredictor):
@@ -205,6 +312,10 @@ class BrokerPredictor(TaskPredictor):
         self._primed = True          # no tick snapshot yet
         self._tick_sim = None
         self._tick_keys: tuple = ()
+        # columnar scratch: per-kind prime buffers + candidate-set buffer,
+        # preallocated once and appended in place tick after tick
+        self._prime_bufs: dict[str, np.ndarray] = {}
+        self._cand_buf = np.empty((64, N_FEATURES), np.float32)
         # demand-side accounting: what the per-decision path would have cost.
         # These depend only on the decision sequence, so they are identical
         # across executors (unlike dispatch counts, which the broker shrinks).
@@ -239,14 +350,29 @@ class BrokerPredictor(TaskPredictor):
         for row, p in zip(X, probs):
             self._memo[(kind, row.tobytes())] = np.float32(p)
 
+    def _prime_rows(self, kind: str, fill: int) -> tuple[np.ndarray, int]:
+        """The kind's prime buffer with space for one more row at ``fill``."""
+        buf = self._prime_bufs.get(kind)
+        if buf is None:
+            buf = self._prime_bufs[kind] = np.empty((256, N_FEATURES),
+                                                    np.float32)
+        if fill >= buf.shape[0]:
+            new = np.empty((2 * buf.shape[0], N_FEATURES), np.float32)
+            new[:fill] = buf[:fill]
+            buf = self._prime_bufs[kind] = new
+        return buf, fill
+
     def _prime(self, sim, extra_rows):
         """One batched flush covering the whole schedulable cross product
         (pending ∪ penalty-box tasks x nodes with a free slot of the right
-        kind) plus the rows of the triggering request."""
+        kind) plus the rows of the triggering request.  Rows append in place
+        into preallocated per-kind columnar buffers."""
         self._primed = True
-        per_kind: dict[str, list] = {}
+        fills: dict[str, int] = {}
         for kind, x in extra_rows:
-            per_kind.setdefault(kind, []).append(x)
+            buf, fill = self._prime_rows(kind, fills.get(kind, 0))
+            buf[fill] = x
+            fills[kind] = fill + 1
         budget = self.max_prime_rows
         for key in self._tick_keys:
             if budget <= 0:
@@ -256,19 +382,19 @@ class BrokerPredictor(TaskPredictor):
                 continue
             if self.model_for_kind(task.kind) is None:
                 continue
-            for node in sim.nodes:
-                free = (node.free_map_slots() if task.kind == "map"
-                        else node.free_reduce_slots())
-                if free <= 0:
-                    continue
-                per_kind.setdefault(task.kind, []).append(
-                    attempt_features(sim, task, node, False))
+            for node in sim.free_nodes(task.kind, liveness="any"):
+                buf, fill = self._prime_rows(task.kind,
+                                             fills.get(task.kind, 0))
+                attempt_features(sim, task, node, False, out=buf[fill])
+                fills[task.kind] = fill + 1
                 budget -= 1
-        kinds = [k for k, rows in per_kind.items()
-                 if rows and self.model_for_kind(k) is not None]
+                if budget <= 0:
+                    break
+        kinds = [k for k, fill in fills.items()
+                 if fill and self.model_for_kind(k) is not None]
         if not kinds:
             return
-        groups = [(self.model_for_kind(k), np.stack(per_kind[k]))
+        groups = [(self.model_for_kind(k), self._prime_bufs[k][:fills[k]])
                   for k in kinds]
         outs = self._flush(groups)
         for k, (_, X), probs in zip(kinds, groups, outs):
@@ -299,8 +425,12 @@ class BrokerPredictor(TaskPredictor):
             return np.ones(len(nodes), np.float32)
         self.n_demand_calls += 1
         self.n_demand_rows += len(nodes)
-        X = np.stack([attempt_features(sim, task, n, speculative)
-                      for n in nodes])
+        if len(nodes) > self._cand_buf.shape[0]:
+            self._cand_buf = np.empty((2 * len(nodes), N_FEATURES),
+                                      np.float32)
+        X = self._cand_buf[:len(nodes)]
+        for i, n in enumerate(nodes):
+            attempt_features(sim, task, n, speculative, out=X[i])
         if not self._primed:
             self._prime(sim, [(task.kind, x) for x in X])
         out = np.empty(len(nodes), np.float32)

@@ -54,15 +54,10 @@ class Scheduler:
             self.sim.pending.append(t.key)
 
     def _free_nodes(self, kind: str):
-        """Nodes the JobTracker *believes* are schedulable with a free slot."""
-        ns = []
-        for n in self.sim.nodes:
-            if not n.known_alive:
-                continue
-            free = n.free_map_slots() if kind == MAP else n.free_reduce_slots()
-            if free > 0:
-                ns.append(n)
-        return ns
+        """Nodes the JobTracker *believes* are schedulable with a free slot —
+        read from the simulator's incremental indices (O(free) per call, not
+        a rebuild over the whole fleet)."""
+        return self.sim.free_nodes(kind)
 
     def _pick_node(self, task: Task, nodes):
         """Prefer data-local nodes for maps, then least loaded."""
@@ -98,9 +93,11 @@ class Scheduler:
         for job in sim.jobs.values():
             if job.status != "running":
                 continue
-            done = [t for t in job.tasks.values() if t.status == "finished"]
-            if len(done) < max(2, len(job.tasks) // 2):
+            # counter gate first: the task scan only runs for jobs already
+            # half-done (this loop fires on every simulator event)
+            if job.n_finished_tasks < max(2, len(job.tasks) // 2):
                 continue
+            done = [t for t in job.tasks.values() if t.status == "finished"]
             med = sorted(t.done_time - t.first_submit for t in done)[len(done) // 2]
             for t in job.tasks.values():
                 if t.status != "running" or len(t.live_attempts) != 1:
@@ -236,7 +233,7 @@ class CapacityScheduler(Scheduler):
             sim._charge_resources(newest, sim.now - newest.start)
             newest.task.failed_attempts += 1
             n.failed_count += 1
-            n.recent_failures.append(sim.now)
+            n.record_failure(sim.now)
             if sim.trace is not None:
                 sim.trace.record_outcome(sim, newest, False)
             sim._task_attempt_failed(newest.task)

@@ -181,3 +181,46 @@ def test_sweep_markdown_mentions_every_scheduler_and_scenario(small_sweep):
     for sc in spec.scenarios:
         assert sc in md
     assert "## overall" in md
+
+
+# ---------------------------------------------------------------------------
+# Fleet-size scale axis (PR 5)
+# ---------------------------------------------------------------------------
+
+def test_expand_fleet_sizes_axis_and_ids():
+    spec = _spec(scenarios=("baseline",), fleet_sizes=(0, 100))
+    cells = expand(spec)
+    assert len(cells) == 2 * 2 * 2          # scheds x seeds x sizes
+    default_ids = {c.cell_id for c in cells if c.fleet_size == 0}
+    sized_ids = {c.cell_id for c in cells if c.fleet_size == 100}
+    # default cells keep their PR-3/4 coordinates (no fleet segment)...
+    assert default_ids == {"baseline/smoke/fifo/s0", "baseline/smoke/fifo/s1",
+                           "baseline/smoke/atlas-fifo/s0",
+                           "baseline/smoke/atlas-fifo/s1"}
+    # ...and sized cells carry the axis in id + env_key (seeds differ too)
+    assert sized_ids == {"baseline/smoke/n100/fifo/s0",
+                         "baseline/smoke/n100/fifo/s1",
+                         "baseline/smoke/n100/atlas-fifo/s0",
+                         "baseline/smoke/n100/atlas-fifo/s1"}
+    c0 = next(c for c in cells if c.fleet_size == 0)
+    c100 = next(c for c in cells if c.fleet_size == 100)
+    assert cell_config(spec, c100).fleet_size == 100
+    assert cell_config(spec, c0).fleet_size == 0
+    with pytest.raises(KeyError):
+        expand(_spec(fleet_sizes=(-5,)))
+
+
+def test_fleet_size_sweep_cells_and_aggregate_keys():
+    spec = _spec(schedulers=("fifo", "atlas-fifo"), seeds=1,
+                 scenarios=("baseline",), fleet_sizes=(40,),
+                 min_samples=40, max_train=40)
+    result = run_sweep(spec, executor="serial", log=lambda *a: None)
+    assert sorted(r["cell_id"] for r in result["cells"]) == [
+        "baseline/smoke/n40/atlas-fifo/s0", "baseline/smoke/n40/fifo/s0"]
+    assert set(result["aggregates"]) == {"baseline/smoke/n40/fifo",
+                                         "baseline/smoke/n40/atlas-fifo"}
+    assert "baseline/smoke/n40" in result["rankings"]
+    assert all(r["fleet_size"] == 40 for r in result["cells"])
+    # byte-stable like every other sweep
+    again = run_sweep(spec, executor="serial", log=lambda *a: None)
+    assert sweep_json(result) == sweep_json(again)

@@ -3,6 +3,7 @@ flushes, broker/scalar decision parity, cross-client dispatch reduction, and
 the fleet's broker executor reproducing the serial sweep byte-for-byte."""
 
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -197,3 +198,101 @@ def test_fleet_broker_executor_matches_serial_with_10x_fewer_dispatches():
     # deterministic accounting: same spec -> same rounds -> same counts
     again = run_sweep(spec, executor="broker", log=lambda *a: None)
     assert sweep_json(brokered) == sweep_json(again)
+
+
+# ---------------------------------------------------------------------------
+# Skewed waves + queue-depth flush policy (PR 5)
+# ---------------------------------------------------------------------------
+
+def test_skewed_wave_solo_bypass():
+    """One long cell + N short cells: once the short clients deregister, the
+    survivor's requests must NOT pay the barrier round-trip per request — the
+    solo bypass scores them inline, with identical outputs and flush
+    accounting."""
+    X, y = _forest_data(n=500)
+    model = ALL_MODELS["R.F."]().fit(X, y)
+    stream = _forest_data(seed=7)[0]
+    counts = [60, 1, 1, 1]                     # one long + three short cells
+    broker = PredictionBroker()
+    broker.add_clients(len(counts))
+    outs = {}
+
+    def client(ci, n):
+        try:
+            for i in range(n):
+                (out,) = broker.submit([(model, stream[i:i + 1 + (i % 2)])])
+                outs[(ci, i)] = out
+        finally:
+            broker.done()
+
+    threads = [threading.Thread(target=client, args=(ci, n))
+               for ci, n in enumerate(counts)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "broker deadlocked on the skewed wave"
+
+    # bit-parity with scalar scoring for every request of every client
+    for (ci, i), out in outs.items():
+        rows = stream[i:i + 1 + (i % 2)]
+        assert np.array_equal(
+            out, np.asarray(model.predict_proba(rows), np.float32))
+    # the long tail ran solo: most of its requests must have bypassed the
+    # barrier (flush accounting still counts them as one flush each)
+    assert broker.n_solo_flushes >= 40
+    assert broker.n_flushes >= broker.n_solo_flushes
+    assert broker.n_requests == sum(counts)
+
+
+def test_queue_depth_policy_flushes_on_depth():
+    """policy="depth": requests accumulate until the row threshold, then one
+    fat flush serves everyone (no client registration involved)."""
+    X, y = _forest_data()
+    model = ALL_MODELS["R.F."]().fit(X, y)
+    stream = _forest_data(seed=8)[0]
+    n_clients, rows_each = 10, 3
+    broker = PredictionBroker(policy="depth",
+                              depth=n_clients * rows_each, max_delay=30.0)
+    outs = [None] * n_clients
+
+    def client(ci):
+        (outs[ci],) = broker.submit(
+            [(model, stream[ci * rows_each:(ci + 1) * rows_each])])
+
+    threads = [threading.Thread(target=client, args=(ci,))
+               for ci in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "depth policy deadlocked"
+    for ci, out in enumerate(outs):
+        rows = stream[ci * rows_each:(ci + 1) * rows_each]
+        assert np.array_equal(
+            out, np.asarray(model.predict_proba(rows), np.float32))
+    # every request waited for the fat flush: one flush, one fused dispatch
+    assert broker.n_flushes == 1
+    assert broker.n_dispatches == 1
+    assert broker.max_flush_rows == n_clients * rows_each
+
+
+def test_queue_depth_policy_bounded_delay():
+    """A lone sub-threshold request must not wait forever: the deadline timer
+    flushes it within max_delay."""
+    X, y = _forest_data()
+    model = ALL_MODELS["R.F."]().fit(X, y)
+    stream = _forest_data(seed=9)[0]
+    broker = PredictionBroker(policy="depth", depth=10_000, max_delay=0.05)
+    t0 = time.perf_counter()
+    (out,) = broker.submit([(model, stream[:3])])
+    waited = time.perf_counter() - t0
+    assert np.array_equal(
+        out, np.asarray(model.predict_proba(stream[:3]), np.float32))
+    assert broker.n_deadline_flushes == 1
+    assert 0.04 <= waited < 5.0
+
+
+def test_broker_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="policy"):
+        PredictionBroker(policy="vibes")

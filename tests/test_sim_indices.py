@@ -1,0 +1,127 @@
+"""Simulator hot-path index tests: the incrementally maintained free-slot /
+liveness sets and job counters must agree exactly with brute-force scans, the
+failure-history window must stay O(window), and big fleets must run."""
+
+import numpy as np
+
+from repro.cluster.chaos import ChaosConfig, ChaosInjector
+from repro.cluster.experiment import ExperimentConfig, run_scheduler
+from repro.cluster.simulator import (DEFAULT_FLEET, MAP, REDUCE,
+                                     MACHINE_TYPES, Node, Simulator,
+                                     make_fleet)
+from repro.cluster.workload import WorkloadConfig, install, make_workload
+from repro.sched.base import BASELINES
+
+
+def _run_sim(sched="fifo", *, fleet=None, seed=0, intensity=5.0,
+             n_single=14, n_chains=2):
+    sim = Simulator(BASELINES[sched](), fleet=fleet, seed=seed,
+                    chaos=ChaosInjector(ChaosConfig(seed=seed + 1,
+                                                    intensity=intensity)))
+    install(sim, make_workload(WorkloadConfig(n_single=n_single,
+                                              n_chains=n_chains, seed=seed)))
+    sim.run()
+    return sim
+
+
+def _check_indices(sim):
+    for kind, idx in ((MAP, sim._free_map), (REDUCE, sim._free_reduce)):
+        brute = {n.nid for n in sim.nodes
+                 if (n.free_map_slots() if kind == MAP
+                     else n.free_reduce_slots()) > 0}
+        assert idx == brute, f"{kind} free-slot index diverged"
+    assert sim._known_alive == {n.nid for n in sim.nodes if n.known_alive}
+
+
+def _check_job_counters(sim):
+    for j in sim.jobs.values():
+        st = [t.status for t in j.tasks.values()]
+        assert j.n_finished_tasks == st.count("finished"), j.jid
+        assert j.n_failed_tasks == st.count("failed"), j.jid
+        assert j.n_finished_maps == sum(
+            1 for t in j.tasks.values()
+            if t.kind == MAP and t.status == "finished")
+    running = sum(1 for j in sim.jobs.values() if j.status == "running")
+    assert sim.n_running_jobs == running
+
+
+def test_indices_and_counters_match_scans_after_chaos_run():
+    for seed in (0, 3, 11):
+        sim = _run_sim(seed=seed, intensity=6.0)
+        _check_indices(sim)
+        _check_job_counters(sim)
+
+
+def test_free_nodes_matches_bruteforce_views():
+    sim = _run_sim(seed=2)
+    for kind in (MAP, REDUCE):
+        slots = (Node.free_map_slots if kind == MAP
+                 else Node.free_reduce_slots)
+        want_jt = [n.nid for n in sim.nodes if n.known_alive and slots(n) > 0]
+        want_up = [n.nid for n in sim.nodes
+                   if n.tt_alive and not n.suspended and slots(n) > 0]
+        want_any = [n.nid for n in sim.nodes if slots(n) > 0]
+        assert [n.nid for n in sim.free_nodes(kind)] == want_jt
+        assert [n.nid for n in
+                sim.free_nodes(kind, liveness="actual")] == want_up
+        assert [n.nid for n in sim.free_nodes(kind, liveness="any")] == want_any
+
+
+def test_recent_failures_window_eviction():
+    node = Node(0, MACHINE_TYPES["m3.large"])
+    for t in range(0, 3000, 10):
+        node.record_failure(float(t))
+    # only the last window survives in memory — O(window), not O(history)
+    assert len(node.recent_failures) <= 61
+    assert node.recent_failure_count(2990.0) == len(node.recent_failures)
+    assert node.recent_failure_count(2990.0 + 700.0) == 0
+    # count == entries within the horizon (same as a linear scan; unlike the
+    # old maxlen=64 deque, counts above 64 are no longer truncated)
+    node2 = Node(1, MACHINE_TYPES["m3.large"])
+    times = [0.0, 100.0, 650.0, 700.0, 701.0]
+    for t in times:
+        node2.record_failure(t)
+    now = 710.0
+    assert node2.recent_failure_count(now) == sum(
+        1 for t in times if now - t <= 600.0)
+    # a shorter query horizon must not destroy entries still inside the
+    # retention window
+    assert node2.recent_failure_count(now, horizon=20.0) == 2
+    assert node2.recent_failure_count(now) == sum(
+        1 for t in times if now - t <= 600.0)
+
+
+def test_make_fleet_cycles_machine_mix():
+    assert make_fleet(0) == list(DEFAULT_FLEET)
+    f100 = make_fleet(100)
+    assert len(f100) == 100
+    assert set(f100) == set(DEFAULT_FLEET)
+    assert f100[:13] == list(DEFAULT_FLEET)
+
+
+def test_hundred_node_fleet_runs_and_stays_consistent():
+    sim = _run_sim(fleet=make_fleet(100), seed=1, intensity=6.0,
+                   n_single=20, n_chains=2)
+    assert len(sim.nodes) == 100
+    _check_indices(sim)
+    _check_job_counters(sim)
+    m = sim.metrics()
+    assert m["jobs_total"] > 0
+    assert all(j.status in ("finished", "failed") for j in sim.jobs.values())
+
+
+def test_fleet_size_config_runs_atlas_cell():
+    cfg = ExperimentConfig(
+        workload=WorkloadConfig(n_single=8, n_chains=1, seed=0,
+                                submit_horizon=2400.0),
+        chaos=ChaosConfig(intensity=4.0, seed=1), seed=0,
+        min_samples=40, max_train=400, fleet_size=60)
+    metrics, trace, sim = run_scheduler("fifo", cfg, with_trace=True)
+    assert len(sim.nodes) == 60
+    from repro.core.predictor import TaskPredictor
+    pred = TaskPredictor(min_samples=40, max_train=400, seed=0)
+    pred.fit_datasets(*trace.datasets())
+    m2, _, sim2 = run_scheduler("atlas-fifo", cfg, pred)
+    assert len(sim2.nodes) == 60
+    assert m2["jobs_total"] > 0
+    assert np.isfinite(m2["pct_tasks_failed"])
