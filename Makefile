@@ -1,7 +1,7 @@
 # Used verbatim by .github/workflows/ci.yml.
 PY ?= python
 
-.PHONY: test lint sweep-smoke online-smoke bench-smoke
+.PHONY: test lint sweep-smoke online-smoke bench-smoke obs-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -32,3 +32,16 @@ bench-smoke:
 	PYTHONPATH=src $(PY) -m repro.online.bench --smoke \
 		--fleet-sizes 0,100 \
 		--out experiments --stamp-sweep experiments/SWEEP.json
+
+# observability smoke: a tiny fleet cell with --obs (per-cell NDJSON frames +
+# per-cell roll-ups under perf.obs), the dashboard rendered from the frames
+# (non-zero exit when no frames land), and the telemetry overhead guard
+obs-smoke:
+	PYTHONPATH=src $(PY) -m repro.cluster.fleet \
+		--schedulers fifo,atlas-fifo --seeds 1 \
+		--scenarios bursty_tt --workloads smoke \
+		--obs --out experiments
+	PYTHONPATH=src $(PY) -m repro.obs.dashboard \
+		experiments/obs/bursty_tt__smoke__fifo__s0.ndjson \
+		-o experiments/obs/dashboard.html
+	PYTHONPATH=src $(PY) benchmarks/obs_overhead.py

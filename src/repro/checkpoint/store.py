@@ -13,7 +13,6 @@ are device_put against the target shardings, which may differ from the writer's)
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import json
 import pathlib
 import shutil
@@ -23,9 +22,7 @@ import time
 import jax
 import numpy as np
 
-
-def _digest(arr: np.ndarray) -> str:
-    return hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+from repro.util import array_digest
 
 
 @dataclasses.dataclass
@@ -57,7 +54,7 @@ class CheckpointManager:
             digests = []
             shard_path = tmp / "shard_00000.npz"
             np.savez(shard_path, **{f"leaf_{i}": a for i, a in enumerate(host)})
-            digests = [_digest(a) for a in host]
+            digests = [array_digest(a) for a in host]
             meta = {
                 "step": step,
                 "n_leaves": len(host),
@@ -118,7 +115,7 @@ class CheckpointManager:
             else [None] * len(leaves)
         for i, (ref, shard) in enumerate(zip(leaves, shard_leaves)):
             arr = data[f"leaf_{i}"]
-            if verify and _digest(arr) != meta["digests"][i]:
+            if verify and array_digest(arr) != meta["digests"][i]:
                 raise IOError(f"checkpoint leaf {i} digest mismatch (corrupt?)")
             assert tuple(arr.shape) == tuple(ref.shape), \
                 f"leaf {i}: {arr.shape} vs {ref.shape}"

@@ -42,17 +42,31 @@ class ExperimentConfig:
     # fleet-size scale axis: 0 = the paper's 13-slave EMR fleet, N = an
     # N-node fleet cycling the same machine mix (simulator.make_fleet)
     fleet_size: int = 0
+    # live telemetry (repro.obs): when obs_path is set each run streams
+    # per-tick NDJSON frames there and metrics gain a deterministic "obs"
+    # roll-up.  Observers only read sim state, so results are byte-identical
+    # with telemetry on or off.
+    obs_path: str | None = None
+    obs_frame_every: float = 60.0
 
 
 def _fleet_for(cfg: "ExperimentConfig"):
     return make_fleet(cfg.fleet_size) if cfg.fleet_size else None
 
 
+def _make_obs(cfg: ExperimentConfig):
+    if not cfg.obs_path:
+        return None
+    from repro.obs import NDJSONSink, SimObserver
+    return SimObserver(sink=NDJSONSink(cfg.obs_path),
+                       frame_every=cfg.obs_frame_every)
+
+
 def _new_sim(scheduler, cfg: ExperimentConfig, trace) -> Simulator:
     sim = Simulator(scheduler, fleet=_fleet_for(cfg), seed=cfg.seed,
                     heartbeat_interval=cfg.heartbeat_interval,
                     chaos=ChaosInjector(cfg.chaos), trace=trace,
-                    hazard_noise=cfg.hazard_noise)
+                    hazard_noise=cfg.hazard_noise, obs=_make_obs(cfg))
     install(sim, make_workload(cfg.workload))
     return sim
 
@@ -61,6 +75,8 @@ def run_baseline(name: str, cfg: ExperimentConfig, *, with_trace=True):
     trace = TelemetryTrace() if with_trace else None
     sim = _new_sim(BASELINES[name](), cfg, trace)
     metrics = sim.run()
+    if sim.obs is not None:
+        metrics["obs"] = sim.obs.summary()
     return metrics, trace, sim
 
 
@@ -80,8 +96,12 @@ def run_atlas(name: str, cfg: ExperimentConfig,
         threshold=cfg.threshold, n_speculative=cfg.n_speculative,
         retrain_every=cfg.retrain_every, refresher=refresher)
     sim = _new_sim(sched, cfg, trace)
+    if refresher is not None and sim.obs is not None:
+        refresher.obs = sim.obs        # drift/lifecycle markers into frames
     metrics = sim.run()
     metrics["atlas"] = sched.stats()
+    if sim.obs is not None:
+        metrics["obs"] = sim.obs.summary()
     return metrics, trace, sim
 
 
@@ -117,13 +137,24 @@ def run_scheduler(name: str, cfg: ExperimentConfig,
     return metrics, trace, sim
 
 
+def _finished_times(sim) -> dict:
+    """jid -> exec time for finished jobs, read from the telemetry job ledger
+    when one was recorded (the ledger rows close at exactly job.done_time, so
+    this equals the sim.jobs rescan bit-for-bit) and recomputed otherwise."""
+    trace = getattr(sim, "trace", None)
+    rows = getattr(trace, "jobs", None)
+    if rows:
+        return {r["job"]: r["end"] - r["submit"] for r in rows.values()
+                if r["outcome"] == "finished"}
+    return {j.jid: j.done_time - j.submit_time for j in sim.jobs.values()
+            if j.status == "finished"}
+
+
 def _matched_job_times(sim_a, sim_b):
     """Mean exec time over jobs finished under BOTH runs (same jids) — removes the
     survivor bias of comparing different finished-job populations."""
-    fa = {j.jid: j.done_time - j.submit_time for j in sim_a.jobs.values()
-          if j.status == "finished"}
-    fb = {j.jid: j.done_time - j.submit_time for j in sim_b.jobs.values()
-          if j.status == "finished"}
+    fa = _finished_times(sim_a)
+    fb = _finished_times(sim_b)
     common = sorted(set(fa) & set(fb))
     if not common:
         return 0.0, 0.0
@@ -134,10 +165,8 @@ def _matched_job_times(sim_a, sim_b):
 def _matched_long_job_times(sim_a, sim_b, quantile: float = 0.75):
     """Same, restricted to LONG jobs (top quartile of baseline exec time) — the
     paper reports its biggest win (up to 54%) on 40-50-minute jobs."""
-    fa = {j.jid: j.done_time - j.submit_time for j in sim_a.jobs.values()
-          if j.status == "finished"}
-    fb = {j.jid: j.done_time - j.submit_time for j in sim_b.jobs.values()
-          if j.status == "finished"}
+    fa = _finished_times(sim_a)
+    fb = _finished_times(sim_b)
     common = sorted(set(fa) & set(fb))
     if len(common) < 4:
         return 0.0, 0.0
@@ -151,12 +180,21 @@ def _matched_long_job_times(sim_a, sim_b, quantile: float = 0.75):
 
 def compare(name: str, cfg: ExperimentConfig) -> dict:
     """Full §5 protocol for one base scheduler.  Returns {base, atlas, deltas}."""
-    base_metrics, train_trace, base_sim = run_baseline(name, cfg)
+    base_cfg, atlas_cfg = cfg, cfg
+    if cfg.obs_path:                 # two runs: split the frame streams
+        import pathlib
+        p = pathlib.Path(cfg.obs_path)
+        suffix = p.suffix or ".ndjson"
+        base_cfg = dataclasses.replace(
+            cfg, obs_path=str(p.with_name(f"{p.stem}__base{suffix}")))
+        atlas_cfg = dataclasses.replace(
+            cfg, obs_path=str(p.with_name(f"{p.stem}__atlas{suffix}")))
+    base_metrics, train_trace, base_sim = run_baseline(name, base_cfg)
     predictor = TaskPredictor(algo=cfg.algo, seed=cfg.seed,
                               min_samples=cfg.min_samples,
                               max_train=cfg.max_train)
     predictor.fit(train_trace)
-    atlas_metrics, _, atlas_sim = run_atlas(name, cfg, predictor)
+    atlas_metrics, _, atlas_sim = run_atlas(name, atlas_cfg, predictor)
     mt_base, mt_atlas = _matched_job_times(base_sim, atlas_sim)
     base_metrics["job_exec_time_matched"] = mt_base
     atlas_metrics["job_exec_time_matched"] = mt_atlas

@@ -39,11 +39,19 @@ Design points:
 
 CLI:
 
+* **Live telemetry (PR 6).**  ``--obs`` streams per-cell NDJSON frame files
+  (repro.obs) under ``<out>/obs/`` and stamps each cell's deterministic
+  telemetry roll-up into ``SWEEP.json`` under ``perf.obs`` — simulation
+  results stay byte-identical with telemetry on or off (observers only read
+  sim state; the roll-ups carry no wall-clock).
+
+CLI:
+
   python -m repro.cluster.fleet \
       --schedulers fifo,atlas-fifo --seeds 4 \
       --scenarios baseline,bursty_tt,dn_loss [--workloads default] \
       [--executor process|thread|serial|broker] [--workers N] \
-      [--registry DIR] [--out experiments]
+      [--registry DIR] [--obs] [--out experiments]
 """
 
 from __future__ import annotations
@@ -221,7 +229,8 @@ def _run_base_cell(args):
             payload = ("registry", name, version)
         else:
             payload = ("datasets", datasets)
-    return cell, _numeric_metrics(metrics), metrics["sched_stats"], payload
+    return (cell, _numeric_metrics(metrics), metrics["sched_stats"], payload,
+            metrics.get("obs"))
 
 
 def _load_predictor(predictor: TaskPredictor, payload, registry_dir):
@@ -250,10 +259,12 @@ def _run_atlas_cell(args):
                       min_samples=cfg.min_samples, max_train=cfg.max_train),
         payload, registry_dir)
     metrics, _, _ = run_scheduler(cell.scheduler, cfg, predictor)
-    return cell, _numeric_metrics(metrics), metrics["sched_stats"]
+    return (cell, _numeric_metrics(metrics), metrics["sched_stats"],
+            metrics.get("obs"))
 
 
-def _run_atlas_wave_brokered(wave2, registry_dir, workers=None):
+def _run_atlas_wave_brokered(wave2, registry_dir, workers=None,
+                             obs_dir=None):
     """Run every ATLAS cell concurrently as a client of one shared
     PredictionBroker.  Clients are registered before any thread starts so the
     lock-step rounds (and hence dispatch counts) are a pure function of the
@@ -263,6 +274,12 @@ def _run_atlas_wave_brokered(wave2, registry_dir, workers=None):
     from repro.online.broker import BrokerPredictor, PredictionBroker
 
     broker = PredictionBroker(impl="numpy")
+    broker_obs = None
+    if obs_dir is not None:
+        from repro.obs import BrokerObserver, NDJSONSink
+        broker_obs = BrokerObserver(
+            sink=NDJSONSink(pathlib.Path(obs_dir) / "broker.ndjson"))
+        broker.obs = broker_obs
     broker.add_clients(len(wave2))
     predictors = []
 
@@ -278,7 +295,8 @@ def _run_atlas_wave_brokered(wave2, registry_dir, workers=None):
             metrics, _, _ = run_scheduler(cell.scheduler, cfg, predictor)
         finally:
             broker.done()
-        return cell, _numeric_metrics(metrics), metrics["sched_stats"]
+        return (cell, _numeric_metrics(metrics), metrics["sched_stats"],
+                metrics.get("obs"))
 
     # every cell MUST get a thread: all clients are registered up front, and a
     # round only flushes once every registered client has queued — capping
@@ -295,6 +313,9 @@ def _run_atlas_wave_brokered(wave2, registry_dir, workers=None):
         "dispatch_reduction": round(
             demand_calls / max(broker.n_dispatches, 1), 2),
     }}
+    if broker_obs is not None:
+        broker_obs.close()
+        perf["broker_obs"] = broker_obs.summary(deterministic_only=True)
     return out, perf
 
 
@@ -330,9 +351,15 @@ def _make_executor(kind: str, workers: int | None):
 # Sweep driver
 # ---------------------------------------------------------------------------
 
+def _obs_path(obs_dir, cell: CellSpec) -> str:
+    """Frame-stream path for one cell: cell_id with '/' flattened to '__'."""
+    return str(pathlib.Path(obs_dir)
+               / (cell.cell_id.replace("/", "__") + ".ndjson"))
+
+
 def run_sweep(spec: SweepSpec, *, executor: str = "process",
               workers: int | None = None, registry: str | None = None,
-              log=print) -> dict:
+              obs_dir: str | None = None, log=print) -> dict:
     """Execute the full matrix; returns the SWEEP result dict (see sweep_json).
 
     Two waves: (1) all base-scheduler cells plus any training-only runs ATLAS
@@ -343,11 +370,19 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
     ``executor="broker"`` serves wave 2 through one shared PredictionBroker
     (identical cells, far fewer predictor dispatches — see ``perf.broker``).
     ``registry=DIR`` ships model *versions* through a ModelRegistry instead of
-    raw trace arrays (forest-family algos)."""
+    raw trace arrays (forest-family algos).  ``obs_dir=DIR`` streams per-cell
+    telemetry frames there and stamps per-cell roll-ups under ``perf.obs`` —
+    cells/aggregates/rankings stay byte-identical either way."""
     t0 = time.perf_counter()
     cells = expand(spec)
     base_cells = [c for c in cells if atlas_base_name(c.scheduler) is None]
     atlas_cells = [c for c in cells if atlas_base_name(c.scheduler) is not None]
+
+    def _cfg(cell: CellSpec) -> ExperimentConfig:
+        cfg = cell_config(spec, cell)
+        if obs_dir is not None:
+            cfg = dataclasses.replace(cfg, obs_path=_obs_path(obs_dir, cell))
+        return cfg
 
     # training runs needed: one per (base, env) over the ATLAS cells
     needed_cells: dict[tuple, CellSpec] = {}
@@ -363,38 +398,45 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
                         key=lambda k: tuple(str(p) for p in k))
     train_cells = [needed_cells[k] for k in train_only]
 
-    wave1 = [(c, cell_config(spec, c), (c.scheduler,) + c.env_key
+    wave1 = [(c, _cfg(c), (c.scheduler,) + c.env_key
               in needed_train, registry) for c in base_cells]
-    wave1 += [(c, cell_config(spec, c), True, registry) for c in train_cells]
+    wave1 += [(c, _cfg(c), True, registry) for c in train_cells]
 
     log(f"[fleet] {len(cells)} cells "
         f"({len(base_cells)} base + {len(atlas_cells)} atlas), "
         f"{len(train_cells)} extra training runs, executor={executor}"
-        + (f", registry={registry}" if registry else ""))
+        + (f", registry={registry}" if registry else "")
+        + (f", obs={obs_dir}" if obs_dir else ""))
 
     results: dict[str, dict] = {}
     train_data: dict[tuple, object] = {}
     perf: dict = {}
+    obs_cells: dict[str, dict] = {}
     with _make_executor(executor, workers) as pool:
-        for cell, metrics, stats, payload in pool.map(_run_base_cell, wave1):
+        for cell, metrics, stats, payload, obs in pool.map(_run_base_cell,
+                                                           wave1):
             if payload is not None:
                 train_data[(cell.scheduler,) + cell.env_key] = payload
             results[cell.cell_id] = _cell_record(cell, metrics, stats)
+            if obs is not None:
+                obs_cells[cell.cell_id] = obs
         log(f"[fleet] wave 1 done: {len(wave1)} runs, "
             f"{len(train_data)} training payloads "
             f"({time.perf_counter() - t0:.1f}s)")
 
-        wave2 = [(c, cell_config(spec, c),
+        wave2 = [(c, _cfg(c),
                   train_data.get((atlas_base_name(c.scheduler),) + c.env_key))
                  for c in atlas_cells]
         if executor == "broker":
             wave2_out, perf = _run_atlas_wave_brokered(wave2, registry,
-                                                       workers)
+                                                       workers, obs_dir)
         else:
             wave2_out = pool.map(_run_atlas_cell,
                                  [w + (registry,) for w in wave2])
-        for cell, metrics, stats in wave2_out:
+        for cell, metrics, stats, obs in wave2_out:
             results[cell.cell_id] = _cell_record(cell, metrics, stats)
+            if obs is not None:
+                obs_cells[cell.cell_id] = obs
     log(f"[fleet] wave 2 done: {len(atlas_cells)} atlas runs "
         f"({time.perf_counter() - t0:.1f}s total)")
     if perf.get("broker"):
@@ -408,6 +450,15 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
     wanted = {c.cell_id for c in cells}
     records = [results[cid] for cid in sorted(wanted)]
     aggregates = aggregate(records)
+    # telemetry roll-ups live ONLY under perf.obs: strip perf.obs (and an
+    # emptied perf) from SWEEP.json and the bytes match an obs-off run
+    if obs_dir is not None:
+        obs_block = {"cells": {cid: obs_cells[cid]
+                               for cid in sorted(obs_cells) if cid in wanted}}
+        broker_obs = perf.pop("broker_obs", None)
+        if broker_obs is not None:
+            obs_block["broker"] = broker_obs
+        perf["obs"] = obs_block
     import repro
     return {
         "spec": spec.to_json(),
@@ -602,6 +653,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--registry", default=None,
                     help="model-registry dir: ship trained model versions "
                          "to ATLAS cells instead of raw trace arrays")
+    ap.add_argument("--obs", action="store_true",
+                    help="stream per-cell telemetry frames to <out>/obs/ and "
+                         "stamp deterministic roll-ups under perf.obs "
+                         "(simulation results unchanged)")
     ap.add_argument("--out", default="experiments",
                     help="directory for SWEEP.json + SWEEP.md")
     ap.add_argument("--list-scenarios", action="store_true")
@@ -628,11 +683,13 @@ def main(argv=None) -> int:
     except KeyError as e:
         print(f"error: {e.args[0]}", file=sys.stderr)
         return 2
+    obs_dir = str(pathlib.Path(args.out) / "obs") if args.obs else None
     result = run_sweep(spec, executor=args.executor, workers=args.workers,
-                       registry=args.registry)
+                       registry=args.registry, obs_dir=obs_dir)
     jp, mp = write_outputs(result, args.out)
     sys.stdout.write(sweep_markdown(result))
-    print(f"[fleet] wrote {jp} and {mp}")
+    print(f"[fleet] wrote {jp} and {mp}"
+          + (f" (+ telemetry frames in {obs_dir})" if obs_dir else ""))
     return 0
 
 

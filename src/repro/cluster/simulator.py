@@ -211,7 +211,7 @@ class Simulator:
     def __init__(self, scheduler, *, fleet=None, seed: int = 0,
                  heartbeat_interval: float = 600.0, task_timeout: float = 1800.0,
                  chaos=None, trace=None, time_limit: float = 10_000_000.0,
-                 hazard_noise: float = 0.55):
+                 hazard_noise: float = 0.55, obs=None):
         self.rng = random.Random(seed)
         fleet = fleet or DEFAULT_FLEET
         self.nodes = [Node(i, MACHINE_TYPES[m]) for i, m in enumerate(fleet)]
@@ -220,6 +220,7 @@ class Simulator:
         self.task_timeout = task_timeout
         self.chaos = chaos
         self.trace = trace                    # TelemetryTrace or None
+        self.obs = obs                        # repro.obs.SimObserver or None
         self.time_limit = time_limit
         self.hazard_noise = hazard_noise
 
@@ -245,6 +246,8 @@ class Simulator:
         self._known_alive: set = {n.nid for n in self.nodes}
 
         scheduler.bind(self)
+        if obs is not None:
+            obs.bind(self)
         for n in self.nodes:
             self._push(self.heartbeat_interval * (0.5 + 0.5 * self.rng.random()),
                        EV_HEARTBEAT, n.nid)
@@ -585,6 +588,11 @@ class Simulator:
 
     # ------------------------------------------------------------------ loop
     def run(self):
+        obs = self.obs
+        # telemetry hot path inlined: a list add + one float compare per
+        # event (a per-event method call costs ~10x as much).  Read-only —
+        # never touches the RNG or any scheduling input.
+        ev_counts = obs.event_counts if obs is not None else None
         while self._heap:
             t, _, kind, payload = heapq.heappop(self._heap)
             if t > self.time_limit:
@@ -603,8 +611,14 @@ class Simulator:
             elif kind == EV_RETRAIN:
                 self.scheduler.on_retrain()
             self.scheduler.on_tick()
+            if ev_counts is not None:
+                ev_counts[kind] += 1
+                if t >= obs.next_frame_t:
+                    obs.maybe_frame(self)
             if self._done():
                 break
+        if obs is not None:
+            obs.finish(self)
         return self.metrics()
 
     def _done(self) -> bool:

@@ -94,6 +94,7 @@ class TelemetryTrace:
     red_X: list = dataclasses.field(default_factory=list)
     red_y: list = dataclasses.field(default_factory=list)
     _pending: dict = dataclasses.field(default_factory=dict)  # aid -> features
+    jobs: dict = dataclasses.field(default_factory=dict)      # jid -> ledger row
 
     def record_launch(self, sim, att, p_fail_hidden):
         self._pending[att.aid] = attempt_features(sim, att.task, att.node,
@@ -109,12 +110,42 @@ class TelemetryTrace:
         else:
             self.red_X.append(feats)
             self.red_y.append(1.0 if finished else 0.0)
+        row = self.jobs.get(att.task.job_id)
+        if row is not None:
+            row["failed_attempts" if not finished else
+                "finished_attempts"] += 1
 
     def record_job_submit(self, sim, job):
-        pass
+        """Open a ledger row at submit — fires when sim.now == job.submit_time,
+        so `submit` below is exactly job.submit_time."""
+        self.jobs[job.jid] = {
+            "job": job.jid, "jtype": job.jtype, "chain_id": job.chain_id,
+            "submit": float(sim.now), "end": None, "outcome": None,
+            "tasks": len(job.tasks), "maps": job.n_map_tasks,
+            "reduces": len(job.tasks) - job.n_map_tasks,
+            "finished_attempts": 0, "failed_attempts": 0,
+        }
 
     def record_job_end(self, sim, job):
-        pass
+        """Close the row — fires when sim.now == job.done_time, so ledger
+        durations equal ``done_time - submit_time`` recomputed from sim.jobs
+        (the experiment-summary scans reuse this instead of rescanning)."""
+        row = self.jobs.get(job.jid)
+        if row is not None:
+            row["end"] = float(sim.now)
+            row["outcome"] = job.status
+
+    def job_times(self, *, jtypes=None, outcome="finished") -> list[float]:
+        """Completion durations straight from the ledger (submit order)."""
+        out = []
+        for jid in sorted(self.jobs):
+            row = self.jobs[jid]
+            if row["end"] is None or row["outcome"] != outcome:
+                continue
+            if jtypes is not None and row["jtype"] not in jtypes:
+                continue
+            out.append(row["end"] - row["submit"])
+        return out
 
     def datasets(self):
         mx = np.stack(self.map_X) if self.map_X else np.zeros((0, N_FEATURES),

@@ -1,0 +1,21 @@
+"""repro.obs — live fleet observability.
+
+A numpy-backed columnar metrics core (``metrics``), streaming per-tick frame
+sinks (``sink``), instrumentation observers for the simulator / broker /
+drift loop (``instrument``), and a self-contained HTML ops dashboard
+(``dashboard``, also ``python -m repro.obs.dashboard``).
+
+See docs/OBSERVABILITY.md for the metric catalog, sink protocol and the
+overhead budget that keeps this layer always-on.
+"""
+
+from repro.obs.instrument import BrokerObserver, SimObserver
+from repro.obs.metrics import MetricsRegistry, percentile_from_hist
+from repro.obs.sink import (MemorySink, NDJSONSink, Sink, TeeSink,
+                            read_ndjson)
+
+__all__ = [
+    "BrokerObserver", "SimObserver", "MetricsRegistry",
+    "percentile_from_hist", "MemorySink", "NDJSONSink", "Sink", "TeeSink",
+    "read_ndjson",
+]

@@ -1,0 +1,108 @@
+"""Telemetry sinks: where per-tick frames go.
+
+A frame is one JSON-able dict (see ``instrument.SimObserver.frame``).  The
+sink protocol is deliberately tiny — ``emit(frame)`` + ``close()`` — so the
+file sink here and the future async-transport sink (ROADMAP:
+broker-as-a-service) are interchangeable: the instrumentation layer never
+knows whether frames land on disk, in memory, or on a wire.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+class Sink:
+    """Protocol: accepts frames one at a time.  Subclasses override both."""
+
+    def emit(self, frame: dict):
+        raise NotImplementedError
+
+    def close(self):
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        self.close()
+        return False
+
+
+class MemorySink(Sink):
+    """Collects frames in a list (tests, in-process dashboard rendering)."""
+
+    def __init__(self):
+        self.frames: list[dict] = []
+
+    def emit(self, frame: dict):
+        self.frames.append(frame)
+
+
+class NDJSONSink(Sink):
+    """One JSON object per line, append-only.  ``emit`` only appends the
+    frame to a buffer; serialization AND the write happen together every
+    ``flush_every`` frames (and on close).  Batching matters twice over: a
+    live reader (``tail -f`` or the dashboard) stays at most ``flush_every``
+    frames behind while the sim loop avoids a write syscall per frame, and
+    encoding frames back-to-back at flush time runs warm instead of paying
+    cold-cache json costs in the middle of the event loop (the overhead
+    budget in ``benchmarks/obs_overhead.py`` is the forcing function).
+    Pass ``flush_every=1`` for strict frame-at-a-time streaming.  Emitted
+    dicts are serialized at flush time, so callers must hand over ownership
+    (never mutate a frame after emit)."""
+
+    def __init__(self, path, flush_every: int = 32):
+        self.path = pathlib.Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._f = self.path.open("w")
+        self.flush_every = max(int(flush_every), 1)
+        self.n_frames = 0
+        self._buf: list[dict] = []
+
+    def emit(self, frame: dict):
+        self._buf.append(frame)
+        self.n_frames += 1
+        if len(self._buf) >= self.flush_every:
+            self._flush()
+
+    def _flush(self):
+        # compact separators, insertion order: frames are built with a fixed
+        # deterministic key order already, and skipping sort_keys + padding
+        # spaces keeps the per-frame encode inside the telemetry budget
+        dumps = json.dumps
+        self._f.write("".join(
+            [dumps(f, separators=(",", ":")) + "\n" for f in self._buf]))
+        self._buf.clear()
+        self._f.flush()
+
+    def close(self):
+        if self._f is not None:
+            if self._buf:
+                self._flush()
+            self._f.close()
+            self._f = None
+
+
+class TeeSink(Sink):
+    """Fan one frame stream out to several sinks (file + memory, say)."""
+
+    def __init__(self, *sinks: Sink):
+        self.sinks = sinks
+
+    def emit(self, frame: dict):
+        for s in self.sinks:
+            s.emit(frame)
+
+    def close(self):
+        for s in self.sinks:
+            s.close()
+
+
+def read_ndjson(path) -> list[dict]:
+    """Load a frame stream back (skips blank lines)."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return []
+    return [json.loads(line) for line in p.read_text().splitlines() if line]

@@ -151,10 +151,11 @@ def run_scalar(predictor: TaskPredictor, requests) -> dict:
 def run_broker(predictor: TaskPredictor, requests, *, clients: int = 12,
                impl: str = "numpy", rate: float = 0.0,
                policy: str = "barrier", depth: int = 256,
-               max_delay: float = 0.002) -> dict:
+               max_delay: float = 0.002, obs=None) -> dict:
     """Concurrent clients replaying shards of the stream through one broker."""
     broker = PredictionBroker(impl=impl, policy=policy, depth=depth,
                               max_delay=max_delay)
+    broker.obs = obs
     shards = [list(range(c, len(requests), clients)) for c in range(clients)]
     shards = [s for s in shards if s]
     broker.add_clients(len(shards))
@@ -198,16 +199,22 @@ def run_broker(predictor: TaskPredictor, requests, *, clients: int = 12,
         return lat[min(int(q * len(lat)), len(lat) - 1)] * 1e3 if lat else 0.0
 
     s = broker.stats()
-    return {"rows": s["rows"], "requests": s["requests"], "seconds": dt,
-            "rows_per_s": s["rows"] / max(dt, 1e-9),
-            "dispatches": s["dispatches"], "flushes": s["flushes"],
-            "max_flush_rows": s["max_flush_rows"],
-            "clients": len(shards), "impl": impl, "policy": policy,
-            "solo_flushes": broker.n_solo_flushes,
-            "deadline_flushes": broker.n_deadline_flushes,
-            "latency_ms": {"p50": pct(0.50), "p95": pct(0.95),
-                           "p99": pct(0.99)},
-            "outputs": outs}
+    out = {"rows": s["rows"], "requests": s["requests"], "seconds": dt,
+           "rows_per_s": s["rows"] / max(dt, 1e-9),
+           "dispatches": s["dispatches"], "flushes": s["flushes"],
+           "max_flush_rows": s["max_flush_rows"],
+           "clients": len(shards), "impl": impl, "policy": policy,
+           "solo_flushes": broker.n_solo_flushes,
+           "deadline_flushes": broker.n_deadline_flushes,
+           "latency_ms": {"p50": pct(0.50), "p95": pct(0.95),
+                          "p99": pct(0.99)},
+           "outputs": outs}
+    if obs is not None:
+        obs.close()
+        # full summary: the flush-latency section is reporting-only (wall
+        # clock), which is fine here — BENCH latency numbers already are
+        out["obs"] = obs.summary()
+    return out
 
 
 def run_saturated(predictor: TaskPredictor, requests,
@@ -337,14 +344,20 @@ def run_bench(*, rows: int = 6000, clients: int = 12, workload: str = "smoke",
               scenario: str = "bursty_tt", impl: str = "numpy",
               rate: float = 0.0, seed: int = 0, fleet_size: int = 0,
               policy: str = "barrier", depth: int = 256,
-              max_delay: float = 0.002) -> dict:
+              max_delay: float = 0.002, obs_dir=None) -> dict:
     predictor, requests = build_stream(workload=workload, scenario=scenario,
                                        seed=seed, min_rows=rows,
                                        fleet_size=fleet_size)
+    obs = None
+    if obs_dir is not None:
+        from repro.obs import BrokerObserver, NDJSONSink
+        d = pathlib.Path(obs_dir)
+        d.mkdir(parents=True, exist_ok=True)
+        obs = BrokerObserver(sink=NDJSONSink(d / f"bench_n{fleet_size}.ndjson"))
     scalar = run_scalar(predictor, requests)
     broker = run_broker(predictor, requests, clients=clients, impl=impl,
                         rate=rate, policy=policy, depth=depth,
-                        max_delay=max_delay)
+                        max_delay=max_delay, obs=obs)
     saturated = run_saturated(predictor, requests, impl=impl)
     parity = (_parity(scalar, broker, saturated) if impl == "numpy"
               else None)
@@ -396,6 +409,9 @@ def main(argv=None) -> int:
     ap.add_argument("--stamp-sweep", nargs="?", const="experiments/SWEEP.json",
                     default=None, metavar="SWEEP_JSON",
                     help="merge the summary into an existing SWEEP.json/.md")
+    ap.add_argument("--obs", action="store_true",
+                    help="attach a BrokerObserver: per-flush NDJSON frames "
+                         "under <out>/obs/ and an obs block in BENCH_<pr>")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run (fewer rows/clients)")
     args = ap.parse_args(argv)
@@ -404,11 +420,12 @@ def main(argv=None) -> int:
     if args.smoke:
         rows, clients = min(rows, 2000), min(clients, 12)
     fleet_sizes = [int(s) for s in args.fleet_sizes.split(",")]
+    obs_dir = str(pathlib.Path(args.out) / "obs") if args.obs else None
     summary = run_bench_sizes(
         fleet_sizes, rows=rows, clients=clients, workload=args.workload,
         scenario=args.scenario, impl=args.impl, rate=args.rate,
         seed=args.seed, policy=args.policy, depth=args.depth,
-        max_delay=args.max_delay)
+        max_delay=args.max_delay, obs_dir=obs_dir)
 
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
@@ -424,6 +441,11 @@ def main(argv=None) -> int:
             "per_fleet_size": {size: _size_block(s) for size, s in
                                summary["per_fleet_size"].items()},
         }
+        if args.obs:
+            # per-size broker telemetry roll-up (flush hists + latency)
+            bench_art["obs"] = {
+                size: s_sz["broker"].get("obs")
+                for size, s_sz in summary["per_fleet_size"].items()}
         (out / f"BENCH_{m.group(1)}.json").write_text(
             json.dumps(bench_art, indent=2, sort_keys=True) + "\n")
     b, s, f = summary["broker"], summary["scalar"], summary["saturated"]

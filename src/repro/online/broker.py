@@ -53,6 +53,7 @@ throughput), or an explicit kernel impl (``"xla"`` / ``"pallas"`` /
 from __future__ import annotations
 
 import threading
+import time
 
 import numpy as np
 
@@ -61,6 +62,39 @@ from repro.core.predictor import TaskPredictor, forest_family_params
 from repro.ml.forest import forest_predict_grouped
 
 _EMPTY = np.zeros(0, np.float32)
+
+# ---------------------------------------------------------------------------
+# Vectorised feature hashing (the memo key).
+#
+# The memo used to key on row.tobytes() — a 88-byte allocation + copy per
+# probe, per row.  Instead each float32 row is viewed as raw uint32 words and
+# folded with TWO independent multiply-sum hashes over deterministic odd
+# uint64 constants, vectorised over the whole flush.  Keys are (kind, h1, h2):
+# 128 hash bits, so a collision (~2^-128 per pair) is effectively impossible
+# and the forest bit-exactness guarantee still holds in practice.  Hashing is
+# bit-pattern-based, exactly like tobytes(): equal keys <=> equal rows.
+# ---------------------------------------------------------------------------
+
+_HASH_CONSTS: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+
+
+def _hash_consts(width: int) -> tuple[np.ndarray, np.ndarray]:
+    c = _HASH_CONSTS.get(width)
+    if c is None:
+        rng = np.random.default_rng(0xA71A5 + width)   # fixed, per width
+        a = rng.integers(1, 2 ** 63, size=(2, width), dtype=np.uint64)
+        a = a * np.uint64(2) + np.uint64(1)            # odd => full period
+        _HASH_CONSTS[width] = c = (a[0], a[1])
+    return c
+
+
+def feature_hashes(X: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row (h1, h2) uint64 hash pair for a float32 feature matrix —
+    one vectorised multiply-sum per hash, no per-row allocation."""
+    X = np.ascontiguousarray(X, np.float32)
+    u = X.view(np.uint32).astype(np.uint64)
+    a1, a2 = _hash_consts(X.shape[1])
+    return (u * a1).sum(axis=1), (u * a2).sum(axis=1)
 
 
 class _Column:
@@ -174,6 +208,8 @@ class PredictionBroker:
         self._clients = 0
         self._timer: threading.Timer | None = None
         self._timer_gen = 0
+        # optional repro.obs.BrokerObserver: per-flush rows/requests/latency
+        self.obs = None
         # accounting
         self.n_flushes = 0
         self.n_dispatches = 0
@@ -251,12 +287,15 @@ class PredictionBroker:
 
     # ------------------------------------------------------------ flushing
     def _score_direct(self, groups) -> list:
+        t0 = time.perf_counter()
         outs, n = score_groups(groups, impl=self.impl)
         rows = sum(np.asarray(X).shape[0] for _, X in groups)
         self.n_flushes += 1
         self.n_dispatches += n
         self.n_rows += rows
         self.max_flush_rows = max(self.max_flush_rows, rows)
+        if self.obs is not None:
+            self.obs.record_flush(rows, 1, n, time.perf_counter() - t0)
         return outs
 
     def _flush_locked(self):
@@ -267,12 +306,16 @@ class PredictionBroker:
         self._timer = None
         flat = [g for p in batch for g in p.groups]
         try:
+            t0 = time.perf_counter()
             outs, n = score_groups(flat, impl=self.impl)
             rows = sum(np.asarray(X).shape[0] for _, X in flat)
             self.n_flushes += 1
             self.n_dispatches += n
             self.n_rows += rows
             self.max_flush_rows = max(self.max_flush_rows, rows)
+            if self.obs is not None:
+                self.obs.record_flush(rows, len(batch), n,
+                                      time.perf_counter() - t0)
             at = 0
             for p in batch:
                 p.outs = outs[at:at + len(p.groups)]
@@ -322,6 +365,7 @@ class BrokerPredictor(TaskPredictor):
         self.n_demand_calls = 0
         self.n_demand_rows = 0
         self.n_memo_hits = 0
+        self.n_memo_misses = 0
 
     # ------------------------------------------------------------ tick hooks
     def begin_tick(self, sim, extra_keys=()):
@@ -346,9 +390,14 @@ class BrokerPredictor(TaskPredictor):
         self.n_rows_scored += sum(np.asarray(X).shape[0] for _, X in groups)
         return outs
 
-    def _memoize(self, kind: str, X: np.ndarray, probs: np.ndarray):
-        for row, p in zip(X, probs):
-            self._memo[(kind, row.tobytes())] = np.float32(p)
+    def _memoize(self, kind: str, X: np.ndarray, probs: np.ndarray,
+                 hashes=None):
+        """Store per-row probabilities under vectorised (h1, h2) hash keys —
+        one fused hash pass per flush instead of a tobytes() per row."""
+        h1, h2 = feature_hashes(X) if hashes is None else hashes
+        memo = self._memo
+        for a, b, p in zip(h1.tolist(), h2.tolist(), probs):
+            memo[(kind, a, b)] = np.float32(p)
 
     def _prime_rows(self, kind: str, fill: int) -> tuple[np.ndarray, int]:
         """The kind's prime buffer with space for one more row at ``fill``."""
@@ -410,11 +459,13 @@ class BrokerPredictor(TaskPredictor):
         x = attempt_features(sim, task, node, speculative)
         if not self._primed:
             self._prime(sim, [(task.kind, x)])
-        p = self._memo.get((task.kind, x.tobytes()))
+        h1, h2 = feature_hashes(x[None])
+        key = (task.kind, int(h1[0]), int(h2[0]))
+        p = self._memo.get(key)
         if p is None:
+            self.n_memo_misses += 1
             (out,) = self._flush([(model, x[None])])
-            self._memoize(task.kind, x[None], out)
-            p = out[0]
+            self._memo[key] = p = np.float32(out[0])
         else:
             self.n_memo_hits += 1
         return float(p)
@@ -433,17 +484,21 @@ class BrokerPredictor(TaskPredictor):
             attempt_features(sim, task, n, speculative, out=X[i])
         if not self._primed:
             self._prime(sim, [(task.kind, x) for x in X])
+        h1, h2 = feature_hashes(X)           # one vectorised pass, all rows
         out = np.empty(len(nodes), np.float32)
         missing = []
-        for i, row in enumerate(X):
-            p = self._memo.get((task.kind, row.tobytes()))
+        kind, memo = task.kind, self._memo
+        for i in range(len(nodes)):
+            p = memo.get((kind, int(h1[i]), int(h2[i])))
             if p is None:
                 missing.append(i)
             else:
                 self.n_memo_hits += 1
                 out[i] = p
         if missing:
+            self.n_memo_misses += len(missing)
             (scored,) = self._flush([(model, X[missing])])
-            self._memoize(task.kind, X[missing], scored)
+            self._memoize(kind, X[missing], scored,
+                          hashes=(h1[missing], h2[missing]))
             out[missing] = scored
         return out

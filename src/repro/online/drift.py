@@ -99,13 +99,20 @@ class DriftMonitor:
             return 0.0
         return wb - self.reference_brier
 
+    def signals(self) -> dict:
+        """All drift signals in one pass: {psi, brier, score_drift} — what
+        the telemetry layer records per check and ``drifted`` thresholds."""
+        wb = self.window_brier()
+        sd = (0.0 if wb is None or self.reference_brier is None
+              else wb - self.reference_brier)
+        return {"psi": self.feature_psi(), "brier": wb, "score_drift": sd}
+
     def drifted(self) -> tuple[bool, str | None]:
-        psi = self.feature_psi()
-        if psi > self.psi_threshold:
-            return True, f"feature_psi={psi:.3f}"
-        sd = self.score_drift()
-        if sd > self.brier_threshold:
-            return True, f"brier_drift={sd:.3f}"
+        s = self.signals()
+        if s["psi"] > self.psi_threshold:
+            return True, f"feature_psi={s['psi']:.3f}"
+        if s["score_drift"] > self.brier_threshold:
+            return True, f"brier_drift={s['score_drift']:.3f}"
         return False, None
 
 
@@ -128,6 +135,7 @@ class OnlineRefresher:
         self.monitors = {k: DriftMonitor(**(monitor_kw or {}))
                          for k in ("map", "reduce")}
         self.predictor = None
+        self.obs = None            # optional repro.obs.SimObserver
         self.events: list[dict] = []
         self.refreshes = 0
         self.promotions = 0
@@ -135,6 +143,7 @@ class OnlineRefresher:
         self._cursor = {"map": 0, "reduce": 0}
         self._last_fit_at = 0.0
         self._baselined = False
+        self._now = 0.0
 
     def bind_predictor(self, predictor):
         self.predictor = predictor
@@ -154,6 +163,7 @@ class OnlineRefresher:
         """Ingest new outcomes, check drift + staleness, maybe refresh.
         Returns True when a retrain was attempted."""
         pred = self.predictor
+        self._now = sim.now
         if pred.ready and not self._baselined:
             # pre-fitted predictor (fleet payload / compare()): anchor the
             # reference now, or both drift signals stay inert until the first
@@ -170,12 +180,18 @@ class OnlineRefresher:
 
         stale = sim.now - self._last_fit_at >= self.retrain_every
         reason = "staleness" if stale else None
-        if not stale:
-            for kind, mon in self.monitors.items():
-                hit, why = mon.drifted()
-                if hit:
-                    reason = f"{kind}:{why}"
-                    break
+        for kind, mon in self.monitors.items():
+            if self.obs is None and reason is not None:
+                break                          # obs-off: original early exit
+            s = mon.signals()
+            if self.obs is not None:
+                self.obs.record_drift(sim.now, kind, s["psi"], s["brier"],
+                                      s["score_drift"])
+            if reason is None:
+                if s["psi"] > mon.psi_threshold:
+                    reason = f"{kind}:feature_psi={s['psi']:.3f}"
+                elif s["score_drift"] > mon.brier_threshold:
+                    reason = f"{kind}:brier_drift={s['score_drift']:.3f}"
         if reason is None:
             return False
         if not pred.ready and n_new == 0 and not stale:
@@ -267,3 +283,5 @@ class OnlineRefresher:
 
     def _event(self, event: str, **kw):
         self.events.append({"event": event, **kw})
+        if self.obs is not None:               # lifecycle marker into frames
+            self.obs.record_event(event, self._now, **kw)

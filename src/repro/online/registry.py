@@ -21,7 +21,6 @@ version rename — by design loudly, not silently."""
 
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import pathlib
@@ -31,12 +30,9 @@ import time
 import numpy as np
 
 from repro.ml.forest import ForestParams
+from repro.util import array_digest
 
 _ARRAYS = ("feat_idx", "thresholds", "leaves")
-
-
-def _digest(arr: np.ndarray) -> str:
-    return hashlib.sha256(arr.tobytes()).hexdigest()[:16]
 
 
 class ModelRegistry:
@@ -106,7 +102,7 @@ class ModelRegistry:
                 arr = np.asarray(getattr(params, field))
                 key = f"{kind}__{field}"
                 arrays[key] = arr
-                digests[key] = _digest(arr)
+                digests[key] = array_digest(arr)
                 shapes[key] = list(arr.shape)
         np.savez(tmp / "params.npz", **arrays)
         (tmp / "meta.json").write_text(json.dumps({
@@ -169,7 +165,7 @@ class ModelRegistry:
             for field in _ARRAYS:
                 key = f"{kind}__{field}"
                 arr = data[key]
-                if verify and _digest(arr) != meta["digests"][key]:
+                if verify and array_digest(arr) != meta["digests"][key]:
                     raise IOError(
                         f"{name} v{version}: {key} digest mismatch (corrupt?)")
                 fields[field] = arr

@@ -1,0 +1,342 @@
+"""Observability layer tests: metrics-core semantics and determinism, ring
+wraparound, NDJSON round-trip, per-tick simulator frames, SWEEP byte-parity
+with telemetry on vs off, the vectorised broker memo hash, the telemetry job
+ledger, and the ops dashboard renderer."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.cluster.chaos import ChaosConfig
+from repro.cluster.experiment import ExperimentConfig, run_scheduler
+from repro.cluster.fleet import SweepSpec, run_sweep, sweep_json
+from repro.cluster.workload import WorkloadConfig
+from repro.obs import (BrokerObserver, MemorySink, MetricsRegistry,
+                       NDJSONSink, SimObserver, percentile_from_hist,
+                       read_ndjson)
+from repro.obs.dashboard import main as dashboard_main
+from repro.obs.dashboard import render_html
+from repro.online.broker import feature_hashes
+
+
+# ---------------------------------------------------------------------------
+# Metrics core
+# ---------------------------------------------------------------------------
+
+def test_registry_handles_and_snapshot():
+    m = MetricsRegistry()
+    h_c = m.counter("a.count")
+    h_g = m.gauge("a.gauge")
+    h_h = m.histogram("a.hist", (1, 2, 4))
+    m.freeze()
+    m.inc(h_c)
+    m.inc(h_c, 3)
+    m.set(h_g, 0.75)
+    m.observe(h_h, 1.5)
+    snap = m.snapshot()
+    assert snap["counters"]["a.count"] == 4
+    assert snap["gauges"]["a.gauge"] == 0.75
+    assert sum(snap["histograms"]["a.hist"]["counts"]) == 1
+
+
+def test_registry_is_static():
+    m = MetricsRegistry()
+    m.counter("x")
+    with pytest.raises(ValueError):
+        m.counter("x")                    # duplicate name
+    m.freeze()
+    with pytest.raises(RuntimeError):
+        m.counter("y")                    # registration after freeze
+
+
+def test_histogram_bucket_semantics():
+    """Upper-edge buckets with side='left': value == edge lands IN that
+    bucket; values past the last edge land in the overflow bucket."""
+    m = MetricsRegistry()
+    h = m.histogram("h", (1, 2, 4))
+    m.freeze()
+    for v, bucket in ((0.5, 0), (1.0, 0), (1.5, 1), (2.0, 1), (4.0, 2),
+                      (4.5, 3), (100.0, 3)):
+        before = list(m.hist_counts[h])
+        m.observe(h, v)
+        deltas = [a - b for a, b in zip(m.hist_counts[h], before)]
+        assert deltas[bucket] == 1, (v, bucket)
+
+
+def test_observe_many_matches_scalar_path():
+    vals = np.array([0.1, 1.0, 1.1, 3.9, 4.0, 7.0, 1e9])
+    a, b = MetricsRegistry(), MetricsRegistry()
+    ha = a.histogram("h", (1, 2, 4))
+    hb = b.histogram("h", (1, 2, 4))
+    a.freeze(), b.freeze()
+    for v in vals:
+        a.observe(ha, float(v))
+    b.observe_many(hb, vals)
+    assert np.array_equal(a.hist_counts[ha], b.hist_counts[hb])
+
+
+def test_ring_wraparound_keeps_newest_oldest_first():
+    m = MetricsRegistry(ring_capacity=4)
+    h = m.counter("c")
+    m.freeze()
+    for t in range(6):                    # 6 ticks into a 4-slot ring
+        m.inc(h, 10)
+        m.tick(float(t))
+    times, counters, _ = m.ring()
+    assert times.tolist() == [2.0, 3.0, 4.0, 5.0]
+    assert counters[:, h].tolist() == [30, 40, 50, 60]
+    assert m.deltas(h).tolist() == [0, 10, 10, 10]   # first delta anchors at 0
+    assert m.n_ticks == 6
+
+
+def test_metrics_deterministic_replay():
+    def build():
+        m = MetricsRegistry()
+        hc, hg = m.counter("c"), m.gauge("g")
+        hh = m.histogram("h", (1, 10, 100))
+        m.freeze()
+        rng = np.random.default_rng(7)
+        for _ in range(200):
+            m.inc(hc, int(rng.integers(1, 5)))
+            m.set(hg, float(rng.random()))
+            m.observe(hh, float(rng.random() * 200))
+        return json.dumps(m.snapshot(), sort_keys=True)
+    assert build() == build()
+
+
+def test_percentile_from_hist():
+    edges = np.array([1.0, 2.0, 4.0])
+    counts = np.array([10, 0, 0, 0])
+    assert percentile_from_hist(edges, counts, 0.5) == 1.0
+    counts = np.array([5, 5, 0, 0])
+    assert percentile_from_hist(edges, counts, 0.99) == 2.0
+    assert percentile_from_hist(edges, np.array([0, 0, 0, 10]), 0.5) == 4.0
+    assert percentile_from_hist(edges, np.zeros(4, int), 0.5) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Sinks
+# ---------------------------------------------------------------------------
+
+def test_ndjson_roundtrip(tmp_path):
+    frames = [{"type": "meta", "t": 0.0, "n": 3},
+              {"type": "frame", "t": 1.5, "occ": [0.1, 0.2]},
+              {"type": "final", "t": 2.0, "nested": {"a": [1, 2]}}]
+    p = tmp_path / "sub" / "frames.ndjson"   # parent dir auto-created
+    sink = NDJSONSink(p)
+    for f in frames:
+        sink.emit(f)
+    sink.close()
+    assert sink.n_frames == 3
+    assert read_ndjson(p) == frames
+    assert read_ndjson(tmp_path / "missing.ndjson") == []
+
+
+# ---------------------------------------------------------------------------
+# Simulator instrumentation
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(
+        workload=WorkloadConfig(n_single=10, n_chains=2, seed=5),
+        chaos=ChaosConfig(intensity=2.0, seed=6),
+        seed=3, min_samples=32, max_train=256)
+    base.update(kw)
+    return ExperimentConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def fifo_obs_run(tmp_path_factory):
+    path = tmp_path_factory.mktemp("obs") / "fifo.ndjson"
+    cfg = _cfg(obs_path=str(path), obs_frame_every=120.0)
+    metrics, trace, sim = run_scheduler("fifo", cfg)
+    return path, metrics, trace, sim
+
+
+def test_sim_observer_streams_frames(fifo_obs_run):
+    path, metrics, trace, sim = fifo_obs_run
+    frames = read_ndjson(path)
+    assert frames[0]["type"] == "meta"
+    assert frames[0]["n_nodes"] == len(sim.nodes)
+    assert frames[-1]["type"] == "final"
+    body = [f for f in frames if f["type"] == "frame"]
+    assert body, "no per-tick frames emitted"
+    ts = [f["t"] for f in body]
+    assert ts == sorted(ts)
+    for f in body:
+        assert 0.0 <= f["occ"] <= 1.0
+        assert len(f["node_occ"]) == len(sim.nodes)
+        assert all(d >= 0 for d in f["node_fail"])
+    # the deterministic roll-up is stamped into the run metrics
+    obs = metrics["obs"]
+    assert obs["frames"] == len(body)
+    assert obs["events"]["submit"] > 0
+    assert obs["events"]["heartbeat"] > 0
+
+
+def test_obs_never_changes_sim_results(fifo_obs_run):
+    """Telemetry on vs off: identical metrics (the observer only reads)."""
+    path, metrics, _, _ = fifo_obs_run
+    plain, _, _ = run_scheduler("fifo", _cfg())
+    instrumented = {k: v for k, v in metrics.items() if k != "obs"}
+    assert instrumented == plain
+
+
+def test_job_ledger_matches_job_table(fifo_obs_run):
+    """The telemetry job ledger reproduces the sim.jobs rescan bit-for-bit."""
+    _, _, trace, sim = fifo_obs_run
+    assert set(trace.jobs) == set(sim.jobs)
+    ledger = {jid: r for jid, r in trace.jobs.items()}
+    for jid, job in sim.jobs.items():
+        row = ledger[jid]
+        assert row["submit"] == job.submit_time
+        assert row["outcome"] == job.status
+        if job.status == "finished":
+            assert row["end"] == job.done_time
+    times = trace.job_times()
+    rescan = sorted(j.done_time - j.submit_time
+                    for j in sim.jobs.values() if j.status == "finished")
+    assert sorted(times) == rescan
+
+
+# ---------------------------------------------------------------------------
+# Fleet sweep parity: --obs must not move a single byte of SWEEP.json
+# ---------------------------------------------------------------------------
+
+def test_sweep_byte_parity_obs_on_vs_off(tmp_path):
+    spec = SweepSpec(schedulers=("fifo", "atlas-fifo"), seeds=1,
+                     scenarios=("baseline",), workloads=("smoke",))
+    off = run_sweep(spec, executor="serial", log=lambda *a: None)
+    on = run_sweep(spec, executor="serial", obs_dir=str(tmp_path / "obs"),
+                   log=lambda *a: None)
+    # telemetry roll-ups live ONLY under perf.obs
+    obs_block = on["perf"].pop("obs")
+    if not on["perf"]:
+        on.pop("perf")
+    assert sweep_json(on) == sweep_json(off)
+    # ...and every requested cell streamed frames + landed a roll-up
+    assert set(obs_block["cells"]) == {r["cell_id"] for r in off["cells"]}
+    for cid in obs_block["cells"]:
+        f = tmp_path / "obs" / (cid.replace("/", "__") + ".ndjson")
+        assert f.exists() and read_ndjson(f)[-1]["type"] == "final"
+
+
+# ---------------------------------------------------------------------------
+# Broker: vectorised memo hash + flush observer
+# ---------------------------------------------------------------------------
+
+def test_feature_hashes_bit_pattern_semantics():
+    rng = np.random.default_rng(0)
+    X = rng.random((64, 22)).astype(np.float32)
+    h1, h2 = feature_hashes(X)
+    assert h1.shape == h2.shape == (64,)
+    # same bits -> same key (the memo contract)
+    g1, g2 = feature_hashes(X.copy())
+    assert np.array_equal(h1, g1) and np.array_equal(h2, g2)
+    # distinct rows -> distinct 128-bit keys
+    keys = set(zip(h1.tolist(), h2.tolist()))
+    assert len(keys) == 64
+    # the hash keys raw float bits, exactly like the tobytes() it replaced:
+    # -0.0 and +0.0 compare equal but are different keys
+    z = np.zeros((1, 4), np.float32)
+    nz = z.copy()
+    nz[0, 0] = -0.0
+    assert feature_hashes(z)[0][0] != feature_hashes(nz)[0][0]
+
+
+def test_broker_observer_summary_and_frames():
+    sink = MemorySink()
+    obs = BrokerObserver(sink=sink)
+    for rows, reqs, disp, lat in ((4, 2, 1, 0.2e-3), (16, 8, 2, 1.1e-3),
+                                  (4, 2, 1, 0.4e-3)):
+        obs.record_flush(rows, reqs, disp, lat)
+    det = obs.summary(deterministic_only=True)
+    assert det["broker.flushes"] == 3
+    assert det["broker.rows"] == 24
+    assert det["broker.dispatches"] == 4
+    assert "flush_latency_ms" not in det      # wall clock never in stable out
+    full = obs.summary()
+    assert full["flush_latency_ms"]["p50"] > 0
+    assert [f["rows"] for f in sink.frames] == [4, 16, 4]
+    assert det["flush_rows_p50"] == 4.0
+
+
+def test_sim_observer_memory_sink_collapses_idle_gaps():
+    """Quiet periods collapse: frame count tracks boundaries crossed by
+    events, never busy-waits through idle simulated time."""
+
+    class _Node:
+        def __init__(self):
+            self.spec = type("S", (), {"map_slots": 2, "reduce_slots": 2,
+                                       "name": "n"})()
+            self.running_maps = 1
+            self.running_reduces = 0
+            self.last_heartbeat = 0.0
+            self.failed_count = 0
+
+    class _Sim:
+        nodes = [_Node()]
+        pending = ()
+        n_running_jobs = 0
+        heartbeat_interval = 600.0
+        _known_alive = {0}
+        scheduler = type("Sch", (), {"name": "fifo"})()
+        now = 0.0
+
+    sink = MemorySink()
+    obs = SimObserver(sink=sink, frame_every=10.0, min_events_per_frame=1)
+    sim = _Sim()
+    obs.bind(sim)
+    for t in (1.0, 5.0, 12.0, 1000.0, 1001.0):   # long idle gap: 12 -> 1000
+        sim.now = t
+        obs.after_event(sim, 0)
+    body = [f for f in sink.frames if f["type"] == "frame"]
+    # one frame per crossing, stamped on the boundary grid: the 12 -> 1000
+    # gap costs ONE frame (at the first missed boundary), not 98 of them
+    assert [f["t"] for f in body] == [10.0, 20.0]
+    sim.now = 1015.0
+    obs.after_event(sim, 0)                      # next boundary is 1010
+    assert [f["t"] for f in sink.frames if f["type"] == "frame"] \
+        == [10.0, 20.0, 1010.0]
+
+    # the density gate: boundary crossings alone don't emit — frames wait
+    # for min_events_per_frame events, bounding telemetry work per event
+    gated = SimObserver(sink=MemorySink(), frame_every=10.0,
+                        min_events_per_frame=3)
+    gated.bind(sim2 := _Sim())
+    for t in (15.0, 30.0, 45.0, 60.0, 75.0, 90.0):   # every event crosses
+        sim2.now = t
+        gated.after_event(sim2, 0)
+    assert gated._n_frames == 2                  # 6 events / gate of 3
+
+
+# ---------------------------------------------------------------------------
+# Dashboard
+# ---------------------------------------------------------------------------
+
+def test_dashboard_renders_all_sections(fifo_obs_run):
+    path, _, _, _ = fifo_obs_run
+    html = render_html(read_ndjson(path))
+    assert html.lstrip().startswith("<!DOCTYPE html>")
+    for needle in ("Fleet occupancy", "failure", "<svg", "viz-root",
+                   "prefers-color-scheme: dark", "<details>"):
+        assert needle in html, needle
+
+
+def test_dashboard_cli(tmp_path, fifo_obs_run, capsys):
+    path, _, _, _ = fifo_obs_run
+    out = tmp_path / "dash.html"
+    rc = dashboard_main([str(path), "-o", str(out)])
+    assert rc == 0
+    stat = json.loads(capsys.readouterr().out)
+    assert stat["frames"] > 0 and out.stat().st_size == stat["bytes"]
+    # no frames -> non-zero exit (the obs-smoke CI assertion)
+    empty = tmp_path / "empty.ndjson"
+    empty.write_text("")
+    assert dashboard_main([str(empty), "-o", str(tmp_path / "x.html")]) == 2
+
+
+def test_dashboard_rejects_empty_stream():
+    with pytest.raises(ValueError):
+        render_html([])
