@@ -1,7 +1,7 @@
 # Used verbatim by .github/workflows/ci.yml.
 PY ?= python
 
-.PHONY: test lint sweep-smoke online-smoke bench-smoke obs-smoke
+.PHONY: test lint sweep-smoke online-smoke bench-smoke obs-smoke serve-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -32,6 +32,24 @@ bench-smoke:
 	PYTHONPATH=src $(PY) -m repro.online.bench --smoke \
 		--fleet-sizes 0,100 \
 		--out experiments --stamp-sweep experiments/SWEEP.json
+
+# async-serving smoke: (1) fleet --executor async must reproduce the broker
+# executor's SWEEP.json byte-for-byte on the smoke matrix, (2) the open-loop
+# bench on the inproc backend must hold the p99 tail budget (p99 <= max(10x
+# p50, 25 ms)) with bit-parity — non-zero exit on either break; emits
+# experiments/BENCH_<pr>.json
+serve-smoke:
+	PYTHONPATH=src $(PY) -m repro.cluster.fleet \
+		--schedulers fifo,atlas-fifo --seeds 2 \
+		--scenarios baseline --workloads smoke \
+		--executor async --out experiments/serve_async
+	PYTHONPATH=src $(PY) -m repro.cluster.fleet \
+		--schedulers fifo,atlas-fifo --seeds 2 \
+		--scenarios baseline --workloads smoke \
+		--executor broker --out experiments/serve_broker
+	cmp experiments/serve_async/SWEEP.json experiments/serve_broker/SWEEP.json
+	PYTHONPATH=src $(PY) -m repro.online.bench --smoke \
+		--open-backends inproc --out experiments
 
 # observability smoke: a tiny fleet cell with --obs (per-cell NDJSON frames +
 # per-cell roll-ups under perf.obs), the dashboard rendered from the frames

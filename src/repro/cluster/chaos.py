@@ -18,11 +18,24 @@ import random
 from repro.cluster import simulator as S
 
 
+# the paper's 13-slave EMR fleet: ``intensity`` is calibrated against it, so
+# per-node hazard scaling is defined relative to this size
+REFERENCE_FLEET = 13
+
+
 @dataclasses.dataclass
 class ChaosConfig:
     # intensity 5.0 calibrates the FIFO baseline near the paper's Google-trace
     # ceiling (~30-40% failed jobs); see EXPERIMENTS.md §Calibration
     intensity: float = 5.0
+    # hazard scaling across fleet sizes.  "cluster" (default, the historical
+    # behaviour) keeps the event rate cluster-wide, so a 1000-node fleet sees
+    # the same events/second as the paper's 13 slaves — proportionally ~77x
+    # less chaos per node, which silently softens every large --fleet-size
+    # cell.  "per-node" scales the event rate by n_nodes/REFERENCE_FLEET
+    # (burst footprints stay absolute, so per-node burst hazard scales
+    # identically): failure *rates* stay comparable across fleet sizes.
+    hazard: str = "cluster"
     mean_interarrival: float = 240.0   # seconds between chaos events at intensity 1
     kill_tt: float = 0.22
     suspend_tt: float = 0.12
@@ -42,6 +55,9 @@ class ChaosConfig:
 class ChaosInjector:
     def __init__(self, cfg: ChaosConfig | None = None):
         self.cfg = cfg or ChaosConfig()
+        if self.cfg.hazard not in ("cluster", "per-node"):
+            raise ValueError(f"unknown hazard mode {self.cfg.hazard!r} "
+                             "(cluster|per-node)")
         self.rng = random.Random(self.cfg.seed)
         self.sim: S.Simulator | None = None
         self.events_fired = 0
@@ -52,8 +68,16 @@ class ChaosInjector:
     def schedule_initial(self):
         self._schedule_next()
 
+    def hazard_scale(self) -> float:
+        """Event-rate multiplier: 1 for cluster-wide hazard, fleet-size
+        proportional (n/13) in per-node mode."""
+        if self.cfg.hazard == "per-node" and self.sim is not None:
+            return max(len(self.sim.nodes), 1) / REFERENCE_FLEET
+        return 1.0
+
     def _schedule_next(self):
-        lam = self.cfg.mean_interarrival / max(self.cfg.intensity, 1e-6)
+        rate = self.cfg.intensity * self.hazard_scale()
+        lam = self.cfg.mean_interarrival / max(rate, 1e-6)
         dt = self.rng.expovariate(1.0 / lam)
         self.sim._push(self.sim.now + dt, S.EV_CHAOS, None)
 

@@ -37,20 +37,26 @@ Design points:
   wave's models to a versioned ``ModelRegistry`` and ships *version ids* to the
   ATLAS wave instead of raw trace arrays.
 
-CLI:
-
 * **Live telemetry (PR 6).**  ``--obs`` streams per-cell NDJSON frame files
   (repro.obs) under ``<out>/obs/`` and stamps each cell's deterministic
   telemetry roll-up into ``SWEEP.json`` under ``perf.obs`` — simulation
   results stay byte-identical with telemetry on or off (observers only read
   sim state; the roll-ups carry no wall-clock).
 
+* **Async serving (PR 7).**  ``--executor async`` serves the ATLAS wave
+  through one ``repro.online.server.AsyncBroker`` over the transport layer
+  (policy="barrier"), reproducing the broker executor's SWEEP.json byte for
+  byte — the stepping stone to out-of-process serving.  ``--hazard per-node``
+  scales chaos event rates with fleet size (``repro.cluster.chaos``) so
+  failure rates stay comparable across ``--fleet-size``.
+
 CLI:
 
   python -m repro.cluster.fleet \
       --schedulers fifo,atlas-fifo --seeds 4 \
       --scenarios baseline,bursty_tt,dn_loss [--workloads default] \
-      [--executor process|thread|serial|broker] [--workers N] \
+      [--executor process|thread|serial|broker|async] [--workers N] \
+      [--hazard cluster|per-node] \
       [--registry DIR] [--obs] [--out experiments]
 """
 
@@ -123,6 +129,7 @@ class SweepSpec:
     scenarios: tuple = ("baseline",)
     workloads: tuple = ("default",)
     fleet_sizes: tuple = (0,)         # 0 = paper fleet; N = make_fleet(N)
+    hazard: str = "cluster"           # chaos scaling: cluster | per-node
     algo: str = "R.F."
     threshold: float = 0.5
     n_speculative: int = 2
@@ -168,6 +175,9 @@ def expand(spec: SweepSpec) -> list[CellSpec]:
     for fs in spec.fleet_sizes:
         if fs < 0:
             raise KeyError(f"negative fleet size {fs}")
+    if spec.hazard not in ("cluster", "per-node"):
+        raise KeyError(f"unknown hazard mode {spec.hazard!r} "
+                       "(cluster|per-node)")
     cells = {
         CellSpec(scheduler=sched, scenario=sc, workload=wl, seed_index=si,
                  fleet_size=fs)
@@ -181,9 +191,15 @@ def expand(spec: SweepSpec) -> list[CellSpec]:
 
 def cell_config(spec: SweepSpec, cell: CellSpec) -> ExperimentConfig:
     env = cell.env_key
+    # hazard mode rides on the chaos config; "cluster" (the default) leaves
+    # the scenario's historical bytes untouched, "per-node" scales event
+    # rates with fleet size so failure rates compare across --fleet-size
+    chaos = scenario_chaos(cell.scenario, cell_seed("chaos", *env))
+    if spec.hazard != "cluster":
+        chaos = dataclasses.replace(chaos, hazard=spec.hazard)
     return ExperimentConfig(
         workload=workload_for_seed(cell.workload, cell_seed("workload", *env)),
-        chaos=scenario_chaos(cell.scenario, cell_seed("chaos", *env)),
+        chaos=chaos,
         seed=cell_seed("sim", *env),
         heartbeat_interval=spec.heartbeat_interval,
         algo=spec.algo, threshold=spec.threshold,
@@ -319,6 +335,70 @@ def _run_atlas_wave_brokered(wave2, registry_dir, workers=None,
     return out, perf
 
 
+def _run_atlas_wave_async(wave2, registry_dir, workers=None, obs_dir=None):
+    """Run every ATLAS cell as a *transport client* of one serving
+    ``AsyncBroker`` (policy="barrier"): the same lock-step rounds as
+    ``--executor broker``, driven by an event loop over ``repro.online.
+    transport`` comms instead of a condition variable.  Rounds are a pure
+    function of each client's request sequence, so the SWEEP.json bytes —
+    including ``perf.broker`` — match the threaded broker executor exactly.
+    Returns (records, perf)."""
+    import concurrent.futures as cf
+
+    from repro.online.broker import BrokerPredictor
+    from repro.online.server import AsyncBroker, BrokerClient
+
+    server = AsyncBroker(impl="numpy", policy="barrier")
+    broker_obs = None
+    if obs_dir is not None:
+        from repro.obs import BrokerObserver, NDJSONSink
+        broker_obs = BrokerObserver(
+            sink=NDJSONSink(pathlib.Path(obs_dir) / "broker.ndjson"))
+        server.obs = broker_obs
+    server.start()
+    address = server.serve()
+    server.add_clients(len(wave2))
+    predictors = []
+
+    def run_one(args):
+        cell, cfg, payload = args
+        client = BrokerClient(address, server.loop)
+        try:  # client.done() exactly once, or the round waits forever
+            predictor = _load_predictor(
+                BrokerPredictor(broker=client, algo=cfg.algo, seed=cfg.seed,
+                                min_samples=cfg.min_samples,
+                                max_train=cfg.max_train),
+                payload, registry_dir)
+            predictors.append(predictor)
+            metrics, _, _ = run_scheduler(cell.scheduler, cfg, predictor)
+        finally:
+            client.done()
+            client.close()
+        return (cell, _numeric_metrics(metrics), metrics["sched_stats"],
+                metrics.get("obs"))
+
+    try:
+        # same rule as the threaded broker wave: every registered client
+        # needs a live thread or the barrier round can never complete
+        with cf.ThreadPoolExecutor(max_workers=max(len(wave2), 1)) as pool:
+            out = list(pool.map(run_one, wave2))
+        demand_calls = sum(p.n_demand_calls for p in predictors)
+        demand_rows = sum(p.n_demand_rows for p in predictors)
+        perf = {"broker": {
+            **server.stats(),
+            "demand_calls": demand_calls,
+            "demand_rows": demand_rows,
+            "dispatch_reduction": round(
+                demand_calls / max(server.n_dispatches, 1), 2),
+        }}
+    finally:
+        server.stop()
+    if broker_obs is not None:
+        broker_obs.close()
+        perf["broker_obs"] = broker_obs.summary(deterministic_only=True)
+    return out, perf
+
+
 class _SerialExecutor:
     def map(self, fn, it):
         return list(map(fn, it))
@@ -331,9 +411,9 @@ class _SerialExecutor:
 
 
 def _make_executor(kind: str, workers: int | None):
-    if kind in ("serial", "broker"):
-        # "broker" batches only the ATLAS wave (threads sharing one broker);
-        # wave 1 runs serially in-process so training payloads stay local
+    if kind in ("serial", "broker", "async"):
+        # "broker"/"async" batch only the ATLAS wave (threads sharing one
+        # broker); wave 1 runs serially in-process so payloads stay local
         return _SerialExecutor()
     if kind == "thread":
         return concurrent.futures.ThreadPoolExecutor(max_workers=workers)
@@ -344,7 +424,7 @@ def _make_executor(kind: str, workers: int | None):
         return concurrent.futures.ProcessPoolExecutor(
             max_workers=workers or os.cpu_count(), mp_context=ctx)
     raise ValueError(
-        f"unknown executor {kind!r} (process|thread|serial|broker)")
+        f"unknown executor {kind!r} (process|thread|serial|broker|async)")
 
 
 # ---------------------------------------------------------------------------
@@ -430,6 +510,9 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
         if executor == "broker":
             wave2_out, perf = _run_atlas_wave_brokered(wave2, registry,
                                                        workers, obs_dir)
+        elif executor == "async":
+            wave2_out, perf = _run_atlas_wave_async(wave2, registry,
+                                                    workers, obs_dir)
         else:
             wave2_out = pool.map(_run_atlas_cell,
                                  [w + (registry,) for w in wave2])
@@ -648,7 +731,14 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--min-samples", type=int, default=150,
                     help="min labelled rows before a model trains")
     ap.add_argument("--executor", default="process",
-                    choices=("process", "thread", "serial", "broker"))
+                    choices=("process", "thread", "serial", "broker",
+                             "async"))
+    ap.add_argument("--hazard", default="cluster",
+                    choices=("cluster", "per-node"),
+                    help="chaos scaling: 'cluster' keeps the historical "
+                         "cluster-wide event rate; 'per-node' scales it "
+                         "with fleet size so failure rates stay comparable "
+                         "across --fleet-size")
     ap.add_argument("--workers", type=int, default=None)
     ap.add_argument("--registry", default=None,
                     help="model-registry dir: ship trained model versions "
@@ -677,6 +767,7 @@ def main(argv=None) -> int:
         scenarios=scenarios,
         workloads=tuple(args.workloads.split(",")),
         fleet_sizes=tuple(int(s) for s in args.fleet_sizes.split(",")),
+        hazard=args.hazard,
         algo=args.algo, min_samples=args.min_samples)
     try:
         expand(spec)

@@ -12,10 +12,10 @@ overhead budget that keeps this layer always-on.
 from repro.obs.instrument import BrokerObserver, SimObserver
 from repro.obs.metrics import MetricsRegistry, percentile_from_hist
 from repro.obs.sink import (MemorySink, NDJSONSink, Sink, TeeSink,
-                            read_ndjson)
+                            TransportSink, read_ndjson)
 
 __all__ = [
     "BrokerObserver", "SimObserver", "MetricsRegistry",
     "percentile_from_hist", "MemorySink", "NDJSONSink", "Sink", "TeeSink",
-    "read_ndjson",
+    "TransportSink", "read_ndjson",
 ]

@@ -81,6 +81,8 @@ class SimObserver:
         handles["h_stale_max"] = m.gauge("sim.hb_stale_max")
         handles["h_stale_mean"] = m.gauge("sim.hb_stale_mean")
         handles["h_memo_rate"] = m.gauge("pred.memo_hit_rate")
+        handles["h_memo_size"] = m.gauge("pred.memo_size")
+        handles["h_memo_evict"] = m.gauge("pred.memo_evictions")
         handles["_h_drift"] = {kind: (m.gauge(f"drift.{kind}.psi"),
                                       m.gauge(f"drift.{kind}.brier"))
                                for kind in ("map", "reduce")}
@@ -221,6 +223,9 @@ class SimObserver:
         pred = self._pred_stats(sim)
         if pred is not None and pred["demand_rows"]:
             g[self.h_memo_rate] = pred["memo_hits"] / pred["demand_rows"]
+        if pred is not None and "memo_size" in pred:
+            g[self.h_memo_size] = float(pred["memo_size"])
+            g[self.h_memo_evict] = float(pred["memo_evictions"])
         m.tick(t)
         self._n_frames += 1
         self._occ_sum += occ
@@ -255,7 +260,9 @@ class SimObserver:
         if hasattr(pred, "n_memo_hits"):      # BrokerPredictor accounting
             out.update(memo_hits=pred.n_memo_hits,
                        memo_misses=pred.n_memo_misses,
-                       demand_rows=pred.n_demand_rows)
+                       demand_rows=pred.n_demand_rows,
+                       memo_size=len(getattr(pred, "_memo", ())),
+                       memo_evictions=getattr(pred, "n_memo_evictions", 0))
         else:
             out.update(memo_hits=0, memo_misses=0, demand_rows=0)
         return out
@@ -305,6 +312,7 @@ class SimObserver:
             "occupancy_mean": _round(self._occ_sum / nf),
             "occupancy_last": _round(g["sim.occupancy"]),
             "memo_hit_rate": _round(g["pred.memo_hit_rate"]),
+            "memo_evictions": int(g["pred.memo_evictions"]),
         }
         if self._drift:
             out["drift_last"] = dict(sorted(self._drift.items()))

@@ -100,6 +100,47 @@ class TeeSink(Sink):
             s.close()
 
 
+class TransportSink(Sink):
+    """Streams frames over a ``repro.online.transport`` comm to a serving
+    ``AsyncBroker`` (``{"op": "telemetry", "frame": …}``), which forwards
+    them to whatever Sink it was configured with — the live-dashboard wire
+    the ROADMAP asks for, on the same transport the prediction traffic uses.
+
+    ``emit`` blocks until the frame is on the channel, so a slow or wedged
+    collector applies backpressure here instead of growing an unbounded
+    buffer (inproc: bounded channel; tcp: kernel socket buffer).  Pass the
+    broker's own ``loop`` for ``inproc://`` addresses (inproc channels are
+    loop-local); tcp addresses may instead let the sink run a private loop
+    thread."""
+
+    def __init__(self, address: str, loop=None, **connect_kw):
+        import asyncio
+        import threading
+
+        from repro.online.transport import SyncComm
+        self.address = address
+        self._own_loop = loop is None
+        if self._own_loop:
+            loop = asyncio.new_event_loop()
+            t = threading.Thread(target=loop.run_forever, daemon=True,
+                                 name="transport-sink")
+            t.start()
+        self._loop = loop
+        self._comm = SyncComm.connect(address, loop, **connect_kw)
+        self.n_frames = 0
+
+    def emit(self, frame: dict):
+        self._comm.send({"op": "telemetry", "frame": frame})
+        self.n_frames += 1
+
+    def close(self):
+        if self._comm is not None:
+            self._comm.close()
+            self._comm = None
+            if self._own_loop:
+                self._loop.call_soon_threadsafe(self._loop.stop)
+
+
 def read_ndjson(path) -> list[dict]:
     """Load a frame stream back (skips blank lines)."""
     p = pathlib.Path(path)

@@ -2,6 +2,10 @@
 
   broker     batched prediction broker: tick-primed memo + cross-cell
              barrier-flush batching, bit-identical to per-decision scoring
+  transport  connector/listener comm layer (inproc:// zero-copy channels,
+             tcp:// length-prefixed msgpack/JSON frames)
+  server     AsyncBroker: the broker as a service — event-loop serving with
+             virtual-time flush scheduling (continuous batching)
   registry   versioned, atomic ForestParams store (publish/promote/rollback)
   drift      sliding-window drift monitor + incremental refresh control loop
   bench      load-generator CLI: python -m repro.online.bench
@@ -11,6 +15,11 @@ from repro.online.broker import (BrokerPredictor, PredictionBroker,
                                  score_groups)
 from repro.online.drift import DriftMonitor, OnlineRefresher
 from repro.online.registry import ModelRegistry
+from repro.online.server import AsyncBroker, BrokerClient
+from repro.online.transport import (Comm, CommClosedError, FrameTooLargeError,
+                                    Listener, SyncComm, connect, listen)
 
 __all__ = ["BrokerPredictor", "PredictionBroker", "score_groups",
-           "DriftMonitor", "OnlineRefresher", "ModelRegistry"]
+           "DriftMonitor", "OnlineRefresher", "ModelRegistry",
+           "AsyncBroker", "BrokerClient", "Comm", "CommClosedError",
+           "FrameTooLargeError", "Listener", "SyncComm", "connect", "listen"]

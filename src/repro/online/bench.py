@@ -10,14 +10,21 @@ raised), trains the predictor on it, then serves the stream three ways:
   saturated  open loop: the stream arrives faster than flushes drain, so the
              queue depth fills every flush — the broker's peak batched
              throughput (this is the ≥10x-vs-scalar number)
+  open-loop  (PR 7) timed arrivals through the serving ``AsyncBroker`` over
+             the transport layer: Poisson and bursty (two-state MMPP)
+             schedules on inproc:// and tcp:// backends, latency measured
+             from each request's *scheduled* arrival (no coordinated
+             omission), p50/p95/p99 + SLO-violation rate per config
 
-Row-level outputs are compared bit-for-bit across all three modes
+Row-level outputs are compared bit-for-bit across all modes
 (``impl="numpy"``), so the bench doubles as a live parity check.
 
   python -m repro.online.bench [--rows 6000] [--clients 12] [--workload smoke]
       [--scenario bursty_tt] [--impl numpy|auto|xla|interpret] [--rate R]
       [--fleet-sizes 0,100] [--policy barrier|depth] [--depth N]
-      [--max-delay S] [--out experiments] [--stamp-sweep [PATH]] [--smoke]
+      [--max-delay S] [--no-open-loop] [--open-rate R] [--slo-ms MS]
+      [--open-backends inproc,tcp] [--out experiments]
+      [--stamp-sweep [PATH]] [--smoke]
 
 ``--rate`` paces each client (requests/s of wall time, 0 = flat out).
 ``--fleet-sizes`` is the scale axis: each size replays a decision stream from
@@ -32,6 +39,7 @@ parity breaks — ``make bench-smoke`` gates CI on this."""
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import pathlib
 import re
@@ -49,6 +57,15 @@ from repro.online.broker import PredictionBroker
 # single-proposal p_success rows, periodically a candidate-set p_success_nodes
 # (whose size tracks the fleet: every free node is a candidate placement)
 REQUEST_SIZES = (1, 1, 1, 2, 1, 1, 13, 1, 1, 4)
+
+# open-loop auto-rate ceilings (requests/s): past these the per-message
+# event-loop hop — not forest scoring — is what saturates, and pushing an
+# open-loop schedule beyond service capacity just measures queue growth
+OPEN_RATE_CAP = 12000.0
+TCP_RATE_CAP = 4000.0
+
+# CI tail budget: open-loop p99 must stay under max(10x p50, this floor)
+P99_FLOOR_MS = 25.0
 
 
 def request_sizes(fleet_size: int = 0) -> tuple:
@@ -246,6 +263,145 @@ def run_saturated(predictor: TaskPredictor, requests,
             "outputs": outs}
 
 
+def _arrival_schedule(n: int, rate_rps: float, kind: str, rng) -> np.ndarray:
+    """Cumulative scheduled offsets (seconds) for ``n`` requests.
+
+    "poisson" draws exponential gaps at ``rate_rps``; "bursty" is a two-state
+    MMPP — bursts at 4x the base rate, calm stretches at 0.4x, flipping with
+    probability 0.05 per arrival — so the mean rate is *approximately* the
+    base and the tails come from genuine arrival clumps."""
+    rate_rps = max(rate_rps, 1e-6)
+    if kind == "poisson":
+        gaps = rng.exponential(1.0 / rate_rps, size=n)
+    elif kind == "bursty":
+        gaps = np.empty(n)
+        fast = True
+        for i in range(n):
+            r = rate_rps * (4.0 if fast else 0.4)
+            gaps[i] = rng.exponential(1.0 / r)
+            if rng.rand() < 0.05:
+                fast = not fast
+    else:
+        raise ValueError(f"unknown arrival process {kind!r}")
+    return np.cumsum(gaps)
+
+
+async def _open_loop_client(address, requests, idxs, sched, t0, outs, lats,
+                            slo_ms):
+    """One open-loop client: fire requests at their scheduled offsets without
+    waiting for replies; a reader task demuxes replies by id.  Latency is
+    measured from the *scheduled* arrival, so a stalled broker keeps paying
+    for the requests it should already have served (no coordinated omission).
+    """
+    from repro.online.transport import connect
+    comm = await connect(address)
+    pending: dict = {}
+    n = len(idxs)
+
+    async def reader():
+        for _ in range(n):
+            reply = await comm.recv()
+            t_done = time.perf_counter()
+            qi, t_sched = pending.pop(reply["id"])
+            if reply.get("error") is not None:
+                raise RuntimeError(f"broker error: {reply['error']}")
+            outs[qi] = reply["probs"][0]
+            lats[qi] = max(t_done - t_sched, 0.0)
+
+    rtask = asyncio.ensure_future(reader())
+    try:
+        for j, qi in enumerate(idxs):
+            t_sched = t0 + sched[j]
+            delay = t_sched - time.perf_counter()
+            if delay > 0:
+                await asyncio.sleep(delay)
+            kind, X = requests[qi % len(requests)]
+            msg = {"op": "predict", "id": j, "kind": kind, "X": X}
+            if slo_ms:
+                msg["budget_ms"] = slo_ms
+            pending[j] = (qi, t_sched)
+            await comm.send(msg)
+        await rtask
+    finally:
+        rtask.cancel()
+        await comm.close()
+
+
+def run_open_loop(predictor, requests, *, backend: str = "inproc",
+                  arrivals: str = "poisson", clients: int = 8,
+                  rate_rps: float = 1000.0, n_requests: int | None = None,
+                  slo_ms: float = 25.0, policy: str = "vt", depth: int = 2048,
+                  vt_window: int | None = None, impl: str = "numpy",
+                  seed: int = 0) -> dict:
+    """Open-loop load through a serving AsyncBroker on one transport backend.
+
+    ``rate_rps`` is the *aggregate* arrival rate across all clients; the
+    request stream is replayed modulo its length when ``n_requests`` exceeds
+    it (outputs stay comparable to the scalar baseline index-wise)."""
+    from repro.online.server import AsyncBroker
+
+    models = {k: predictor.model_for_kind(k) for k in ("map", "reduce")}
+    models = {k: v for k, v in models.items() if v is not None}
+    server = AsyncBroker(models, impl=impl, policy=policy, depth=depth,
+                         vt_window=vt_window, slo_ms=slo_ms)
+    server.start()
+    n = n_requests or len(requests)
+    shards = [list(range(c, n, clients)) for c in range(clients)]
+    shards = [s for s in shards if s]
+    rng = np.random.RandomState(seed)
+    per_client = rate_rps / max(len(shards), 1)
+    scheds = [_arrival_schedule(len(sh), per_client, arrivals, rng)
+              for sh in shards]
+    outs: list = [None] * n
+    lats: list = [None] * n
+
+    async def drive():
+        t0 = time.perf_counter() + 0.02     # common epoch for all schedules
+        await asyncio.gather(*[
+            _open_loop_client(address, requests, sh, sc, t0, outs, lats,
+                              slo_ms)
+            for sh, sc in zip(shards, scheds)])
+        return time.perf_counter() - t0
+
+    try:
+        address = server.serve("tcp://127.0.0.1:0" if backend == "tcp"
+                               else "")
+        if backend == "tcp":
+            # tcp clients live on their own loop in this thread; frames
+            # cross the real (loopback) socket stack
+            dt = asyncio.run(drive())
+        else:
+            # inproc channels are loop-local: clients run on the server loop
+            dt = asyncio.run_coroutine_threadsafe(
+                drive(), server.loop).result(600)
+        stats = server.stats()
+        causes = {"depth": server.n_depth_flushes,
+                  "vt": server.n_vt_flushes,
+                  "idle": server.n_idle_flushes,
+                  "slo": server.n_deadline_flushes}
+    finally:
+        server.stop()
+
+    lat = sorted(1e3 * v for v in lats if v is not None)
+
+    def pct(q):
+        return lat[min(int(q * len(lat)), len(lat) - 1)] if lat else 0.0
+
+    viol = sum(1 for v in lat if v > slo_ms) / max(len(lat), 1)
+    return {"backend": backend, "arrivals": arrivals,
+            "clients": len(shards), "rate_rps": round(rate_rps, 1),
+            "slo_ms": slo_ms, "policy": policy,
+            "rows": stats["rows"], "requests": stats["requests"],
+            "seconds": dt, "rows_per_s": stats["rows"] / max(dt, 1e-9),
+            "flushes": stats["flushes"], "dispatches": stats["dispatches"],
+            "max_flush_rows": stats["max_flush_rows"],
+            "flush_causes": causes,
+            "latency_ms": {"p50": pct(0.50), "p95": pct(0.95),
+                           "p99": pct(0.99)},
+            "slo_violation_rate": viol,
+            "outputs": outs}
+
+
 def _parity(scalar: dict, *others) -> bool:
     for mode in others:
         for a, b in zip(scalar["outputs"], mode["outputs"]):
@@ -254,14 +410,25 @@ def _parity(scalar: dict, *others) -> bool:
     return True
 
 
+def _parity_mod(scalar_outputs: list, outs: list) -> bool:
+    """Open-loop replays the stream modulo its length: outs[i] must equal
+    the scalar output for request i % len(stream), bit for bit."""
+    m = len(scalar_outputs)
+    for i, o in enumerate(outs):
+        if o is None or not np.array_equal(scalar_outputs[i % m], o):
+            return False
+    return True
+
+
 # ---------------------------------------------------------------------------
 # Reporting
 # ---------------------------------------------------------------------------
 
 def summarize(scalar: dict, broker: dict, saturated: dict,
-              parity: bool | None, fleet_size: int = 0) -> dict:
+              parity: bool | None, fleet_size: int = 0,
+              open_loop: dict | None = None) -> dict:
     strip = lambda d: {k: v for k, v in d.items() if k != "outputs"}  # noqa: E731
-    return {
+    out = {
         "pr": repro.PR_TAG,
         "fleet_size": fleet_size,
         "scalar": strip(scalar),
@@ -274,11 +441,14 @@ def summarize(scalar: dict, broker: dict, saturated: dict,
         / max(broker["dispatches"], 1),
         "parity": parity,
     }
+    if open_loop:
+        out["open_loop"] = {cfg: strip(r) for cfg, r in open_loop.items()}
+    return out
 
 
 def _size_block(summary: dict) -> dict:
     """The compact per-fleet-size perf record stamped into SWEEP/BENCH."""
-    return {
+    blk = {
         "batched_rows_per_s": round(summary["saturated"]["rows_per_s"], 1),
         "broker_rows_per_s": round(summary["broker"]["rows_per_s"], 1),
         "scalar_rows_per_s": round(summary["scalar"]["rows_per_s"], 1),
@@ -288,6 +458,24 @@ def _size_block(summary: dict) -> dict:
                        for k, v in summary["broker"]["latency_ms"].items()},
         "parity": summary["parity"],
     }
+    if summary.get("open_loop"):
+        blk["open_loop"] = {
+            cfg: {
+                "rate_rps": r["rate_rps"],
+                "rows_per_s": round(r["rows_per_s"], 1),
+                "latency_ms": {k: round(v, 3)
+                               for k, v in r["latency_ms"].items()},
+                "p99_over_p50": round(
+                    r["latency_ms"]["p99"]
+                    / max(r["latency_ms"]["p50"], 1e-9), 2),
+                "slo_ms": r["slo_ms"],
+                "slo_violation_rate": round(r["slo_violation_rate"], 4),
+                "flush_causes": r["flush_causes"],
+                "parity": r["parity"],
+            }
+            for cfg, r in sorted(summary["open_loop"].items())
+        }
+    return blk
 
 
 def stamp_sweep(summary: dict, sweep_json_path) -> bool:
@@ -344,7 +532,10 @@ def run_bench(*, rows: int = 6000, clients: int = 12, workload: str = "smoke",
               scenario: str = "bursty_tt", impl: str = "numpy",
               rate: float = 0.0, seed: int = 0, fleet_size: int = 0,
               policy: str = "barrier", depth: int = 256,
-              max_delay: float = 0.002, obs_dir=None) -> dict:
+              max_delay: float = 0.002, obs_dir=None,
+              open_loop: bool = True, open_rate: float = 0.0,
+              open_backends: tuple = ("inproc", "tcp"),
+              slo_ms: float = 25.0) -> dict:
     predictor, requests = build_stream(workload=workload, scenario=scenario,
                                        seed=seed, min_rows=rows,
                                        fleet_size=fleet_size)
@@ -361,7 +552,32 @@ def run_bench(*, rows: int = 6000, clients: int = 12, workload: str = "smoke",
     saturated = run_saturated(predictor, requests, impl=impl)
     parity = (_parity(scalar, broker, saturated) if impl == "numpy"
               else None)
-    return summarize(scalar, broker, saturated, parity, fleet_size)
+    open_runs = {}
+    if open_loop:
+        # auto rate: half the saturated row throughput converted to
+        # requests/s, capped where per-message event-loop overhead (not
+        # scoring) becomes the bottleneck — the point is tail behaviour
+        # under heavy-but-feasible load, not a throughput contest
+        mean_rows = scalar["rows"] / max(len(requests), 1)
+        auto = min(0.5 * saturated["rows_per_s"] / max(mean_rows, 1e-9),
+                   OPEN_RATE_CAP)
+        configs = [(b, "poisson") for b in open_backends]
+        if "inproc" in open_backends:
+            configs.append(("inproc", "bursty"))
+        for b, arr in configs:
+            r = open_rate if open_rate > 0 else (
+                auto if b == "inproc" else min(auto, TCP_RATE_CAP))
+            # size the run to ~1s of schedule so the tail has enough samples
+            n_open = int(min(max(len(requests), r), 60000))
+            run = run_open_loop(
+                predictor, requests, backend=b, arrivals=arr,
+                clients=min(clients, 8), rate_rps=r, n_requests=n_open,
+                slo_ms=slo_ms, impl=impl, seed=seed)
+            run["parity"] = (_parity_mod(scalar["outputs"], run["outputs"])
+                             if impl == "numpy" else None)
+            open_runs[f"{b}_{arr}"] = run
+    return summarize(scalar, broker, saturated, parity, fleet_size,
+                     open_runs)
 
 
 def run_bench_sizes(fleet_sizes, **kw) -> dict:
@@ -404,6 +620,18 @@ def main(argv=None) -> int:
     ap.add_argument("--max-delay", type=float, default=0.002,
                     help="bounded flush delay in seconds (policy=depth)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-open-loop", action="store_true",
+                    help="skip the open-loop AsyncBroker section")
+    ap.add_argument("--open-rate", type=float, default=0.0,
+                    help="aggregate open-loop arrival rate (req/s; 0 = auto "
+                         "from the saturated throughput)")
+    ap.add_argument("--open-backends", default="inproc,tcp",
+                    help="comma list of transport backends for the "
+                         "open-loop section (inproc,tcp)")
+    ap.add_argument("--slo-ms", type=float, default=25.0,
+                    help="open-loop per-request latency budget (drives the "
+                         "broker's early-flush safety valve + the "
+                         "violation-rate metric)")
     ap.add_argument("--out", default="experiments",
                     help="directory for ONLINE.json")
     ap.add_argument("--stamp-sweep", nargs="?", const="experiments/SWEEP.json",
@@ -425,7 +653,10 @@ def main(argv=None) -> int:
         fleet_sizes, rows=rows, clients=clients, workload=args.workload,
         scenario=args.scenario, impl=args.impl, rate=args.rate,
         seed=args.seed, policy=args.policy, depth=args.depth,
-        max_delay=args.max_delay, obs_dir=obs_dir)
+        max_delay=args.max_delay, obs_dir=obs_dir,
+        open_loop=not args.no_open_loop, open_rate=args.open_rate,
+        open_backends=tuple(args.open_backends.split(",")),
+        slo_ms=args.slo_ms)
 
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
@@ -464,6 +695,14 @@ def main(argv=None) -> int:
           f"({summary['speedup_vs_per_decision']:.1f}x vs per-decision), "
           f"dispatch reduction {summary['dispatch_reduction']:.1f}x, "
           f"parity={summary['parity']}")
+    for cfg, r in sorted(summary.get("open_loop", {}).items()):
+        lm = r["latency_ms"]
+        print(f"[online] open-loop {cfg:>14s}: {r['rate_rps']:,.0f} req/s "
+              f"offered, {r['rows_per_s']:,.0f} rows/s served "
+              f"[p50 {lm['p50']:.2f} p95 {lm['p95']:.2f} "
+              f"p99 {lm['p99']:.2f} ms, "
+              f"{100 * r['slo_violation_rate']:.1f}% > {r['slo_ms']:.0f} ms "
+              f"SLO], parity={r['parity']}")
     if len(summary["per_fleet_size"]) > 1:
         for size, s_sz in sorted(summary["per_fleet_size"].items(),
                                  key=lambda kv: int(kv[0])):
@@ -489,6 +728,18 @@ def main(argv=None) -> int:
         print("[online] FAIL: no batched throughput or parity break",
               file=sys.stderr)
         return 1
+    # tail-latency budget: every open-loop config must hold p99 within 10x
+    # of its p50 (with an absolute floor so sub-ms p50s don't gate on noise)
+    # and keep its outputs bit-identical to the scalar baseline
+    for s_sz in summary["per_fleet_size"].values():
+        for cfg, r in s_sz.get("open_loop", {}).items():
+            lm = r["latency_ms"]
+            budget = max(10.0 * lm["p50"], P99_FLOOR_MS)
+            if r["parity"] is False or lm["p99"] > budget:
+                print(f"[online] FAIL: open-loop {cfg} p99 {lm['p99']:.2f} ms"
+                      f" > budget {budget:.2f} ms or parity break"
+                      f" (parity={r['parity']})", file=sys.stderr)
+                return 1
     return 0
 
 

@@ -345,12 +345,20 @@ class BrokerPredictor(TaskPredictor):
     flushes (tick-primed memo + optional shared cross-cell broker) while
     producing bit-identical decisions to the per-decision path."""
 
-    def __init__(self, *, broker: PredictionBroker | None = None,
-                 impl: str = "numpy", max_prime_rows: int = 4096, **kw):
+    def __init__(self, *, broker=None, impl: str = "numpy",
+                 max_prime_rows: int = 4096, memo_cap: int = 65536, **kw):
         super().__init__(**kw)
         self.broker = broker
         self.impl = impl
         self.max_prime_rows = max_prime_rows
+        # exact-feature memo bound: the memo clears per tick in fleet runs,
+        # but a serving-mode predictor (no ticks — e.g. behind the
+        # AsyncBroker on an open-loop stream) would otherwise grow it without
+        # limit.  Eviction is insertion-ordered (python dicts iterate oldest
+        # first), far above any tick's prime size by default so deterministic
+        # sweep accounting never changes; evicted rows simply re-score
+        # bit-identically on their next miss.
+        self.memo_cap = int(memo_cap)
         self._memo: dict = {}
         self._primed = True          # no tick snapshot yet
         self._tick_sim = None
@@ -366,6 +374,7 @@ class BrokerPredictor(TaskPredictor):
         self.n_demand_rows = 0
         self.n_memo_hits = 0
         self.n_memo_misses = 0
+        self.n_memo_evictions = 0
 
     # ------------------------------------------------------------ tick hooks
     def begin_tick(self, sim, extra_keys=()):
@@ -398,6 +407,17 @@ class BrokerPredictor(TaskPredictor):
         memo = self._memo
         for a, b, p in zip(h1.tolist(), h2.tolist(), probs):
             memo[(kind, a, b)] = np.float32(p)
+        self._evict_memo()
+
+    def _evict_memo(self):
+        """Hold the memo at ``memo_cap`` entries, oldest insertions first."""
+        memo = self._memo
+        n_over = len(memo) - self.memo_cap
+        if n_over > 0:
+            it = iter(memo)
+            for key in [next(it) for _ in range(n_over)]:
+                del memo[key]
+            self.n_memo_evictions += n_over
 
     def _prime_rows(self, kind: str, fill: int) -> tuple[np.ndarray, int]:
         """The kind's prime buffer with space for one more row at ``fill``."""
@@ -466,6 +486,7 @@ class BrokerPredictor(TaskPredictor):
             self.n_memo_misses += 1
             (out,) = self._flush([(model, x[None])])
             self._memo[key] = p = np.float32(out[0])
+            self._evict_memo()
         else:
             self.n_memo_hits += 1
         return float(p)

@@ -1,0 +1,427 @@
+"""AsyncBroker — the broker as a service: an asyncio serving loop over the
+``repro.online.transport`` comm layer.
+
+The PR-4/5 ``PredictionBroker`` batches across clients with a lock-step
+barrier (every registered client parks one request per round) or a wall-clock
+depth timer.  Both develop a latency tail under open-loop traffic: the
+barrier makes every request wait for the slowest client's next submit, and
+the timer trades tail batches for 2 ms of deliberate jitter.  BENCH_5
+measured the damage at the paper fleet: p50 1.4 ms but p99 49 ms — pure
+flush-policy stall, not compute.  Since ATLAS puts a prediction on every
+task placement, that tail is scheduler stall time.
+
+``AsyncBroker`` replaces the thread barrier with an event loop and a
+*virtual-time* flush policy:
+
+  policy="vt"       requests are admitted in logical arrival order; ``vnow``
+                    (the admission counter) is the clock.  A flush fires when
+                      - the queued rows reach ``depth``            (depth cap)
+                      - the oldest queued request has seen
+                        ``vt_window`` admissions since its own     (staleness
+                        admission                                   cap)
+                      - the loop drains the currently-ready burst  (idle
+                        of arrivals                                 drain)
+                    The first two are pure functions of the admission
+                    sequence — no wall clock anywhere in the steady state, so
+                    flush composition is keyed to logical arrival order and
+                    batches stay fat exactly when arrivals are dense.  The
+                    idle drain is what kills the tail: whatever accumulated
+                    while the previous flush was scoring goes out as the next
+                    batch immediately (continuous batching), instead of
+                    waiting for a timer or a straggler.  A per-request
+                    latency budget (``slo_ms``, or ``budget_ms`` on the
+                    request) arms one safety-valve timer per batch that
+                    force-flushes early when the oldest request is about to
+                    blow its SLO — the only wall-clock path, and it only
+                    fires when the policy already failed to flush in time.
+  policy="barrier"  the PredictionBroker lock-step round rule (flush when
+                    every registered live client has a request parked),
+                    driven by the loop instead of a condition variable.
+                    Rounds — and therefore every stats() counter — are a
+                    pure function of each client's request sequence, which is
+                    what lets ``fleet --executor async`` reproduce the
+                    threaded barrier executor's SWEEP.json byte for byte.
+
+Wire protocol (one msg dict per frame; ndarray-safe over tcp://):
+
+  {"op": "predict",  "id": n, "kind": "map", "X": ndarray,
+   "budget_ms": 5.0}                 -> {"id": n, "probs": ndarray}
+  {"op": "submit",   "id": n, "groups": [(model, X), ...]}
+                                     -> {"id": n, "probs": [ndarray, ...]}
+                                        (inproc only: live model objects)
+  {"op": "register", "n": 4}         (barrier membership, no reply)
+  {"op": "done"}                     (client will not submit again)
+  {"op": "telemetry", "frame": {...}} (repro.obs frame -> telemetry_sink)
+  {"op": "stats"}                    -> deterministic counter dict
+  {"op": "ping"}                     -> {"op": "pong"}
+
+Row-level outputs are bit-identical to scalar scoring however requests are
+batched (the ``score_groups`` invariant), so every policy serves the same
+floats — the policies only move *when* a batch closes.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import itertools
+import threading
+import time
+
+import numpy as np
+
+from repro.online.broker import score_groups
+from repro.online.transport import (CommClosedError, SyncComm, connect,
+                                    listen)
+
+_SERVE_SEQ = itertools.count()
+
+
+class _Req:
+    """One admitted request: where to reply + its span of the next flush."""
+
+    __slots__ = ("comm", "req_id", "groups", "rows", "vadmit", "deadline")
+
+    def __init__(self, comm, req_id, groups, rows, vadmit, deadline):
+        self.comm = comm
+        self.req_id = req_id
+        self.groups = groups
+        self.rows = rows
+        self.vadmit = vadmit
+        self.deadline = deadline
+
+
+class AsyncBroker:
+    """Event-loop batching server for prediction traffic.
+
+    ``models`` maps kind names ("map"/"reduce") to scoring models for the
+    named-model ``predict`` op (the only op that works across tcp://);
+    in-process clients may instead ship live model objects via ``submit``.
+    The loop runs on a dedicated daemon thread (``start``/``stop``);
+    ``serve`` binds any number of transport addresses onto it."""
+
+    def __init__(self, models: dict | None = None, *, impl: str = "numpy",
+                 policy: str = "vt", depth: int = 2048,
+                 vt_window: int | None = None, slo_ms: float | None = None,
+                 slo_margin: float = 0.5, max_queue_rows: int = 65536,
+                 serializer: str = "auto"):
+        if policy not in ("vt", "barrier"):
+            raise ValueError(f"unknown flush policy {policy!r}")
+        self.models = dict(models or {})
+        self.impl = impl
+        self.policy = policy
+        self.depth = int(depth)
+        self.vt_window = vt_window
+        self.slo_ms = slo_ms
+        self.slo_margin = float(slo_margin)
+        self.max_queue_rows = int(max_queue_rows)
+        self.serializer = serializer
+        # optional collaborators
+        self.obs = None                  # repro.obs.BrokerObserver
+        self.telemetry_sink = None       # repro.obs Sink for telemetry frames
+        # loop state (loop-confined once started)
+        self.loop: asyncio.AbstractEventLoop | None = None
+        self._thread: threading.Thread | None = None
+        self._listeners: list = []
+        self._queue: list[_Req] = []
+        self._queued_rows = 0
+        self._clients = 0
+        self._vnow = 0
+        self._epoch = 0
+        self._slo_handle: asyncio.TimerHandle | None = None
+        self._slo_at = float("inf")
+        self._drain = None               # asyncio.Event, lazily on the loop
+        # deterministic accounting (mirrors PredictionBroker.stats())
+        self.n_flushes = 0
+        self.n_dispatches = 0
+        self.n_rows = 0
+        self.n_requests = 0
+        self.max_flush_rows = 0
+        # cause counters (reporting only — depend on arrival timing)
+        self.n_depth_flushes = 0
+        self.n_vt_flushes = 0
+        self.n_idle_flushes = 0
+        self.n_deadline_flushes = 0
+        self.n_backpressure_waits = 0
+        self.n_telemetry_frames = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "AsyncBroker":
+        """Spin up the serving loop on its own daemon thread."""
+        if self._thread is not None:
+            return self
+        ready = threading.Event()
+
+        def run():
+            self.loop = asyncio.new_event_loop()
+            asyncio.set_event_loop(self.loop)
+            self._drain = asyncio.Event()
+            ready.set()
+            self.loop.run_forever()
+            # unwind whatever the stop() cancellation left behind
+            pending = asyncio.all_tasks(self.loop)
+            for t in pending:
+                t.cancel()
+            if pending:
+                self.loop.run_until_complete(
+                    asyncio.gather(*pending, return_exceptions=True))
+            self.loop.close()
+
+        self._thread = threading.Thread(target=run, daemon=True,
+                                        name="async-broker")
+        self._thread.start()
+        ready.wait()
+        return self
+
+    def serve(self, address: str = "", **kw) -> str:
+        """Bind a listener; returns the bound address (``tcp://…:0`` resolves
+        its ephemeral port, no address picks a fresh inproc name)."""
+        if not address:
+            address = f"inproc://broker-{next(_SERVE_SEQ)}"
+        kw.setdefault("serializer", self.serializer)
+        lst = asyncio.run_coroutine_threadsafe(
+            listen(address, self._handle, **kw), self.loop).result(30)
+        self._listeners.append(lst)
+        return lst.address
+
+    def stop(self):
+        if self._thread is None:
+            return
+
+        async def shutdown():
+            for lst in self._listeners:
+                await lst.stop()
+            self._listeners.clear()
+            if self._queue:              # never strand a parked client
+                self._flush("idle")
+
+        asyncio.run_coroutine_threadsafe(shutdown(), self.loop).result(30)
+        self.loop.call_soon_threadsafe(self.loop.stop)
+        self._thread.join(timeout=30)
+        self._thread = None
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *a):
+        self.stop()
+        return False
+
+    # ------------------------------------------------------------ membership
+    def add_clients(self, n: int = 1):
+        """Barrier-round membership (thread-safe; PredictionBroker API)."""
+        if self.loop is not None and self._thread is not None:
+            self.loop.call_soon_threadsafe(self._add_clients, n)
+        else:
+            self._add_clients(n)
+
+    def _add_clients(self, n: int):
+        self._clients += n
+
+    def _client_done(self):
+        self._clients -= 1
+        if self.policy == "barrier" and self._queue \
+                and len(self._queue) >= max(self._clients, 1):
+            self._flush("round")
+
+    # ------------------------------------------------------------ serving
+    async def _handle(self, comm):
+        try:
+            while True:
+                try:
+                    msg = await comm.recv()
+                except CommClosedError:
+                    return
+                op = msg.get("op")
+                if op == "predict" or op == "submit":
+                    await self._admit(comm, msg, op)
+                elif op == "done":
+                    self._client_done()
+                elif op == "register":
+                    self._add_clients(int(msg.get("n", 1)))
+                elif op == "telemetry":
+                    self.n_telemetry_frames += 1
+                    if self.telemetry_sink is not None:
+                        self.telemetry_sink.emit(msg["frame"])
+                elif op == "stats":
+                    await comm.send(self.stats())
+                elif op == "ping":
+                    await comm.send({"op": "pong"})
+                else:
+                    await comm.send({"id": msg.get("id"),
+                                     "error": f"unknown op {op!r}"})
+        finally:
+            if not comm.closed:
+                await comm.close()
+
+    async def _admit(self, comm, msg, op):
+        if op == "predict":
+            model = self.models.get(msg.get("kind"))
+            if model is None:
+                await comm.send({"id": msg.get("id"),
+                                 "error": f"unknown kind {msg.get('kind')!r}"})
+                return
+            groups = [(model, msg["X"])]
+        else:
+            groups = msg["groups"]
+        rows = sum(np.asarray(X).shape[0] for _, X in groups)
+        # bounded-queue admission control: a full queue parks THIS comm's
+        # read loop until a flush drains — over tcp the stall propagates to
+        # the client through the kernel socket buffer (backpressure, not
+        # load shedding: every admitted request is eventually served)
+        if self.policy == "vt":
+            while self._queued_rows >= self.max_queue_rows:
+                self.n_backpressure_waits += 1
+                self._drain.clear()
+                await self._drain.wait()
+        self.n_requests += 1
+        budget = msg.get("budget_ms", self.slo_ms)
+        deadline = (time.perf_counter() + budget * 1e-3 * self.slo_margin
+                    if budget else None)
+        self._vnow += 1
+        req = _Req(comm, msg.get("id"), groups, rows, self._vnow, deadline)
+        first = not self._queue
+        self._queue.append(req)
+        self._queued_rows += rows
+        if self.policy == "barrier":
+            if len(self._queue) >= max(self._clients, 1):
+                self._flush("round")
+            return
+        # ---- virtual-time policy ----
+        if self._queued_rows >= self.depth:
+            self.n_depth_flushes += 1
+            self._flush("depth")
+            return
+        if self.vt_window is not None \
+                and self._vnow - self._queue[0].vadmit >= self.vt_window:
+            self.n_vt_flushes += 1
+            self._flush("vt")
+            return
+        if first:
+            # idle drain: runs after the callbacks already ready this loop
+            # iteration, so one dense burst of arrivals lands in one batch
+            self.loop.call_soon(self._idle_flush, self._epoch)
+        if deadline is not None and deadline < self._slo_at:
+            self._arm_slo(deadline)
+
+    # ------------------------------------------------------------ flush paths
+    def _idle_flush(self, epoch: int):
+        if epoch == self._epoch and self._queue:
+            self.n_idle_flushes += 1
+            self._flush("idle")
+
+    def _arm_slo(self, deadline: float):
+        if self._slo_handle is not None:
+            self._slo_handle.cancel()
+        self._slo_at = deadline
+        delay = max(deadline - time.perf_counter(), 0.0)
+        self._slo_handle = self.loop.call_later(
+            delay, self._slo_flush, self._epoch)
+
+    def _slo_flush(self, epoch: int):
+        self._slo_handle = None
+        self._slo_at = float("inf")
+        if epoch == self._epoch and self._queue:
+            self.n_deadline_flushes += 1
+            self._flush("slo")
+
+    def _flush(self, cause: str):
+        batch, self._queue = self._queue, []
+        rows, self._queued_rows = self._queued_rows, 0
+        self._epoch += 1
+        if self._slo_handle is not None:
+            self._slo_handle.cancel()
+            self._slo_handle = None
+            self._slo_at = float("inf")
+        self._drain.set()
+        flat = [g for req in batch for g in req.groups]
+        t0 = time.perf_counter()
+        try:
+            outs, n = score_groups(flat, impl=self.impl)
+        except Exception as e:
+            for req in batch:
+                self._reply(req, {"id": req.req_id, "error": repr(e)})
+            return
+        self.n_flushes += 1
+        self.n_dispatches += n
+        self.n_rows += rows
+        self.max_flush_rows = max(self.max_flush_rows, rows)
+        if self.obs is not None:
+            self.obs.record_flush(rows, len(batch), n,
+                                  time.perf_counter() - t0)
+        at = 0
+        for req in batch:
+            span = outs[at:at + len(req.groups)]
+            at += len(req.groups)
+            self._reply(req, {"id": req.req_id, "probs": span})
+
+    def _reply(self, req: _Req, msg: dict):
+        if req.comm.closed:
+            return
+        task = asyncio.ensure_future(req.comm.send(msg))
+        task.add_done_callback(_swallow_closed)
+
+    # ------------------------------------------------------------ accounting
+    def stats(self) -> dict:
+        """Deterministic counters, same keys/semantics as
+        ``PredictionBroker.stats()`` (cause counters stay off — they depend
+        on arrival timing, not on the request streams)."""
+        return {"flushes": self.n_flushes, "dispatches": self.n_dispatches,
+                "rows": self.n_rows, "requests": self.n_requests,
+                "max_flush_rows": self.max_flush_rows,
+                "policy": self.policy}
+
+
+def _swallow_closed(task: asyncio.Task):
+    """A reply raced a client disconnect: nothing to do, nobody to tell."""
+    if not task.cancelled():
+        exc = task.exception()
+        if exc is not None and not isinstance(exc, CommClosedError):
+            raise exc
+
+
+class BrokerClient:
+    """Synchronous client facade with the ``PredictionBroker`` surface
+    (``submit`` / ``done``), so a ``BrokerPredictor`` can serve a fleet cell
+    through an ``AsyncBroker`` unchanged.  One outstanding request per client
+    (the predictor blocks on each flush), so replies need no demux."""
+
+    def __init__(self, address: str, loop: asyncio.AbstractEventLoop,
+                 **connect_kw):
+        self.address = address
+        self._comm = SyncComm.connect(address, loop, **connect_kw)
+        self._seq = 0
+        self._done_sent = False
+
+    def submit(self, groups) -> list:
+        if not groups:
+            return []
+        self._seq += 1
+        self._comm.send({"op": "submit", "id": self._seq, "groups": groups})
+        reply = self._comm.recv()
+        if reply.get("error") is not None:
+            raise RuntimeError(f"broker error: {reply['error']}")
+        return list(reply["probs"])
+
+    def predict(self, kind: str, X, budget_ms: float | None = None):
+        """Named-model scoring (the op that works across tcp://)."""
+        self._seq += 1
+        msg = {"op": "predict", "id": self._seq, "kind": kind, "X": X}
+        if budget_ms is not None:
+            msg["budget_ms"] = budget_ms
+        self._comm.send(msg)
+        reply = self._comm.recv()
+        if reply.get("error") is not None:
+            raise RuntimeError(f"broker error: {reply['error']}")
+        (probs,) = reply["probs"]
+        return probs
+
+    def register(self, n: int = 1):
+        self._comm.send({"op": "register", "n": n})
+
+    def done(self):
+        if not self._done_sent:
+            self._done_sent = True
+            self._comm.send({"op": "done"})
+
+    def close(self):
+        self._comm.close()

@@ -296,3 +296,36 @@ def test_queue_depth_policy_bounded_delay():
 def test_broker_rejects_unknown_policy():
     with pytest.raises(ValueError, match="policy"):
         PredictionBroker(policy="vibes")
+
+
+# ---------------------------------------------------------------------------
+# Exact-feature memo bound (PR 7)
+# ---------------------------------------------------------------------------
+
+def test_broker_predictor_memo_cap_evicts_oldest_first():
+    """A serving-mode predictor (no per-tick memo clears) must hold the memo
+    at memo_cap entries, evicting oldest insertions and counting evictions;
+    surviving entries keep their exact values."""
+    from repro.cluster.telemetry import N_FEATURES
+    from repro.online.broker import feature_hashes
+
+    pred = BrokerPredictor(memo_cap=8, algo="R.F.", seed=0)
+    X = np.arange(16 * N_FEATURES, dtype=np.float32).reshape(16, N_FEATURES)
+    probs = np.linspace(0.0, 1.0, 16).astype(np.float32)
+    pred._memoize("map", X[:8], probs[:8])
+    assert len(pred._memo) == 8 and pred.n_memo_evictions == 0
+    pred._memoize("map", X[8:], probs[8:])
+    assert len(pred._memo) == 8
+    assert pred.n_memo_evictions == 8
+    h1, h2 = feature_hashes(X)
+    for i in range(8):       # the first insertions are gone ...
+        assert ("map", int(h1[i]), int(h2[i])) not in pred._memo
+    for i in range(8, 16):   # ... the newest half survives, values intact
+        assert pred._memo[("map", int(h1[i]), int(h2[i]))] == probs[i]
+
+
+def test_default_memo_cap_never_evicts_in_fleet_ticks():
+    """The default cap sits far above max_prime_rows, so deterministic fleet
+    sweeps (which clear the memo every tick) can never hit eviction."""
+    pred = BrokerPredictor(algo="R.F.", seed=0)
+    assert pred.memo_cap > 4 * pred.max_prime_rows

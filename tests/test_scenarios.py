@@ -66,3 +66,66 @@ def test_workload_shapes_registry():
     w = workload_for_seed("smoke", 99)
     assert w.seed == 99
     assert WORKLOAD_SHAPES["smoke"].seed != 99   # template untouched
+
+
+# ---------------------------------------------------------------------------
+# Per-node hazard scaling (PR 7)
+# ---------------------------------------------------------------------------
+
+def test_per_node_hazard_scales_event_rate_with_fleet_size():
+    """At the reference fleet both modes are identical; at 10x the nodes the
+    per-node mode draws ~10x shorter mean interarrivals while the cluster
+    mode is unchanged — so per-node failure *rates* stay comparable across
+    fleet sizes."""
+    from repro.cluster.chaos import REFERENCE_FLEET, ChaosInjector
+
+    class _Sim:
+        def __init__(self, n):
+            self.nodes = list(range(n))
+
+    def scale(n, hazard):
+        inj = ChaosInjector(ChaosConfig(hazard=hazard))
+        inj.sim = _Sim(n)
+        return inj.hazard_scale()
+
+    assert scale(REFERENCE_FLEET, "cluster") == 1.0
+    assert scale(REFERENCE_FLEET, "per-node") == 1.0
+    assert scale(10 * REFERENCE_FLEET, "cluster") == 1.0
+    assert scale(10 * REFERENCE_FLEET, "per-node") == 10.0
+    # mean sampled interarrival follows the scale (same seed, same draws)
+    class _PushSim(_Sim):
+        now = 0.0
+
+        def __init__(self, n):
+            super().__init__(n)
+            self.dts = []
+
+        def _push(self, t, ev, payload):
+            self.dts.append(t)
+
+    def mean_dt(n, hazard, draws=400):
+        inj = ChaosInjector(ChaosConfig(hazard=hazard, seed=7))
+        sim = _PushSim(n)
+        inj.bind(sim)
+        for _ in range(draws):
+            inj._schedule_next()
+        return sum(sim.dts) / draws
+
+    base = mean_dt(REFERENCE_FLEET, "per-node")
+    scaled = mean_dt(10 * REFERENCE_FLEET, "per-node")
+    assert scaled == pytest.approx(base / 10.0)
+    assert mean_dt(10 * REFERENCE_FLEET, "cluster") == pytest.approx(base)
+
+
+def test_unknown_hazard_mode_rejected():
+    from repro.cluster.chaos import ChaosInjector
+
+    with pytest.raises(ValueError, match="hazard"):
+        ChaosInjector(ChaosConfig(hazard="per-rack"))
+
+
+def test_cluster_hazard_default_keeps_scenario_bytes():
+    """hazard='cluster' is the default everywhere: existing scenario chaos
+    configs are untouched, so historical SWEEP bytes cannot move."""
+    for name in SCENARIOS:
+        assert get_scenario(name).chaos.hazard == "cluster"

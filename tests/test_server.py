@@ -1,0 +1,272 @@
+"""AsyncBroker serving tests: bit-identical outputs under the vt policy,
+barrier-round accounting matching the threaded PredictionBroker, the SLO
+safety valve, error propagation to clients, telemetry forwarding over the
+transport, the open-loop bench path, and ``fleet --executor async``
+reproducing the broker executor's SWEEP.json byte for byte."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster.fleet import SweepSpec, run_sweep, sweep_json
+from repro.ml.models import ALL_MODELS
+from repro.obs import MemorySink, TransportSink
+from repro.online.server import AsyncBroker, BrokerClient, _Req
+
+
+def _forest_data(n=400, f=10, seed=0):
+    rng = np.random.RandomState(seed)
+    X = rng.rand(n, f).astype(np.float32)
+    y = (X[:, 0] + 0.3 * rng.rand(n) > 0.8).astype(np.float32)
+    return X, y
+
+
+def _model(seed=0):
+    X, y = _forest_data(seed=seed)
+    return ALL_MODELS["R.F."]().fit(X, y)
+
+
+# ---------------------------------------------------------------------------
+# vt policy: continuous batching, outputs bit-identical to scalar scoring
+# ---------------------------------------------------------------------------
+
+def test_vt_policy_predict_bitwise_matches_scalar():
+    model = _model()
+    stream = _forest_data(seed=1)[0]
+    requests = [stream[i:i + 1 + (i % 3)] for i in range(0, 90, 3)]
+    with AsyncBroker({"map": model}, policy="vt") as server:
+        addr = server.serve()
+        client = BrokerClient(addr, server.loop)
+        try:
+            for X in requests:
+                out = client.predict("map", X)
+                want = np.asarray(model.predict_proba(X), np.float32)
+                assert np.array_equal(out, want)
+        finally:
+            client.close()
+        stats = server.stats()
+    assert stats["requests"] == len(requests)
+    assert stats["rows"] == sum(X.shape[0] for X in requests)
+    assert stats["flushes"] >= 1 and stats["policy"] == "vt"
+
+
+def test_vt_depth_cap_batches_a_dense_burst_deterministically():
+    """20 requests of 3 rows land on the channel before the handler wakes
+    (inproc sends never suspend below capacity), so the handler drains them
+    in one go: the depth cap (8 rows) closes a batch at 9 rows every third
+    request, and the idle drain sweeps the 6-row tail."""
+    import asyncio
+
+    from repro.online.transport import connect
+
+    model = _model()
+    stream = _forest_data(seed=2)[0]
+    with AsyncBroker({"map": model}, policy="vt", depth=8) as server:
+        addr = server.serve()
+
+        async def burst():
+            comm = await connect(addr)
+            for i in range(20):
+                await comm.send({"op": "predict", "id": i, "kind": "map",
+                                 "X": stream[3 * i:3 * i + 3]})
+            replies = [await comm.recv() for _ in range(20)]
+            await comm.close()
+            return replies
+
+        replies = asyncio.run_coroutine_threadsafe(
+            burst(), server.loop).result(60)
+        assert server.n_depth_flushes == 6
+        assert server.n_idle_flushes == 1
+        assert server.max_flush_rows == 9
+        for r in replies:
+            i = r["id"]
+            want = np.asarray(
+                model.predict_proba(stream[3 * i:3 * i + 3]), np.float32)
+            assert np.array_equal(r["probs"][0], want)
+
+
+# ---------------------------------------------------------------------------
+# barrier policy: PredictionBroker round rules on the event loop
+# ---------------------------------------------------------------------------
+
+def test_barrier_rounds_match_lockstep_decomposition():
+    """Clients with request counts [4, 2, 7]: 2 full three-way rounds, then
+    2 two-way rounds after the short client deregisters, then 3 solo flushes
+    — exactly the threaded PredictionBroker's decomposition."""
+    import threading
+
+    model = _model()
+    stream = _forest_data(seed=3)[0]
+    counts = [4, 2, 7]
+    with AsyncBroker(policy="barrier") as server:
+        addr = server.serve()
+        server.add_clients(len(counts))
+        outs = {}
+
+        def run_client(ci, n):
+            client = BrokerClient(addr, server.loop)
+            try:
+                for i in range(n):
+                    lo = (ci * 31 + i * 3) % 80
+                    (out,) = client.submit([(model, stream[lo:lo + 2])])
+                    outs[(ci, i)] = (lo, out)
+            finally:
+                client.done()
+                client.close()
+
+        threads = [threading.Thread(target=run_client, args=(ci, n))
+                   for ci, n in enumerate(counts)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(60)
+        stats = server.stats()
+    assert stats["flushes"] == 7
+    assert stats["requests"] == sum(counts)
+    for (ci, i), (lo, out) in outs.items():
+        want = np.asarray(model.predict_proba(stream[lo:lo + 2]), np.float32)
+        assert np.array_equal(out, want)
+
+
+def test_empty_submit_short_circuits_client_side():
+    with AsyncBroker(policy="barrier") as server:
+        addr = server.serve()
+        server.add_clients(1)
+        client = BrokerClient(addr, server.loop)
+        try:
+            assert client.submit([]) == []   # no wire traffic, no round
+        finally:
+            client.done()
+            client.close()
+        assert server.stats()["requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO safety valve + error propagation + unknown ops
+# ---------------------------------------------------------------------------
+
+def test_slo_safety_valve_flushes_parked_request():
+    """The wall-clock valve is defense in depth — the idle drain normally
+    beats it — so its mechanics are exercised directly: a request parked on
+    the queue with an armed deadline must flush when the deadline passes."""
+    model = _model()
+    X = _forest_data(seed=4)[0][:3]
+
+    class FakeComm:
+        closed = False
+
+        def __init__(self):
+            self.sent = []
+
+        async def send(self, msg):
+            self.sent.append(msg)
+
+    comm = FakeComm()
+    server = AsyncBroker(policy="vt").start()
+    try:
+        def park():
+            server._queue.append(_Req(comm, 1, [(model, X)], 3, 1, None))
+            server._queued_rows = 3
+            server._arm_slo(time.perf_counter() + 0.02)
+
+        server.loop.call_soon_threadsafe(park)
+        deadline = time.time() + 5
+        while not comm.sent and time.time() < deadline:
+            time.sleep(0.01)
+    finally:
+        server.stop()
+    assert comm.sent and server.n_deadline_flushes == 1
+    want = np.asarray(model.predict_proba(X), np.float32)
+    assert np.array_equal(comm.sent[0]["probs"][0], want)
+
+
+def test_unknown_kind_and_scoring_error_propagate_to_client():
+    class Broken:
+        def predict_proba(self, X):
+            raise RuntimeError("boom")
+
+    model = _model()
+    stream = _forest_data(seed=5)[0]
+    with AsyncBroker({"map": model}, policy="vt") as server:
+        addr = server.serve()
+        client = BrokerClient(addr, server.loop)
+        try:
+            with pytest.raises(RuntimeError, match="unknown kind"):
+                client.predict("nope", stream[:2])
+            with pytest.raises(RuntimeError, match="boom"):
+                client.submit([(Broken(), stream[:2])])
+            # the serving loop survives both: a good request still works
+            out = client.predict("map", stream[:2])
+            want = np.asarray(model.predict_proba(stream[:2]), np.float32)
+            assert np.array_equal(out, want)
+        finally:
+            client.close()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry over the transport
+# ---------------------------------------------------------------------------
+
+def test_transport_sink_forwards_frames_to_server_sink():
+    mem = MemorySink()
+    with AsyncBroker(policy="vt") as server:
+        server.telemetry_sink = mem
+        addr = server.serve()
+        sink = TransportSink(addr, loop=server.loop)
+        frames = [{"t": i, "gauges": {"x": i * 2}} for i in range(5)]
+        for f in frames:
+            sink.emit(f)
+        sink.close()
+        deadline = time.time() + 5
+        while server.n_telemetry_frames < len(frames) \
+                and time.time() < deadline:
+            time.sleep(0.01)
+    assert server.n_telemetry_frames == len(frames)
+    assert mem.frames == frames          # inproc: the very same dicts
+
+
+# ---------------------------------------------------------------------------
+# Open-loop bench path
+# ---------------------------------------------------------------------------
+
+def test_open_loop_parity_and_tail_metrics():
+    from repro.online.bench import _parity_mod, run_open_loop
+
+    class _P:
+        def __init__(self, m):
+            self.m = m
+
+        def model_for_kind(self, kind):
+            return self.m
+
+    model = _model()
+    stream = _forest_data(seed=6)[0]
+    requests = [("map", stream[i:i + 1 + (i % 3)]) for i in range(0, 120, 3)]
+    scalar = [np.asarray(model.predict_proba(X), np.float32)
+              for _, X in requests]
+    for arrivals in ("poisson", "bursty"):
+        run = run_open_loop(_P(model), requests, backend="inproc",
+                            arrivals=arrivals, clients=3, rate_rps=3000.0,
+                            slo_ms=50.0, seed=0)
+        assert _parity_mod(scalar, run["outputs"])
+        assert run["rows"] == sum(X.shape[0] for _, X in requests)
+        lm = run["latency_ms"]
+        assert 0 <= lm["p50"] <= lm["p95"] <= lm["p99"]
+        assert 0.0 <= run["slo_violation_rate"] <= 1.0
+        assert run["flushes"] >= 1
+        assert sum(run["flush_causes"].values()) == run["flushes"]
+
+
+# ---------------------------------------------------------------------------
+# fleet --executor async: byte parity with the broker executor
+# ---------------------------------------------------------------------------
+
+def test_fleet_async_executor_matches_broker_sweep_bytes():
+    spec = SweepSpec(schedulers=("fifo", "atlas-fifo"), seeds=4,
+                     scenarios=("baseline",), workloads=("smoke",),
+                     min_samples=40, max_train=40)
+    asynced = run_sweep(spec, executor="async", log=lambda *a: None)
+    brokered = run_sweep(spec, executor="broker", log=lambda *a: None)
+    # full equality, perf.broker included: same rounds, same counts
+    assert sweep_json(asynced) == sweep_json(brokered)
