@@ -1,7 +1,8 @@
 # Used verbatim by .github/workflows/ci.yml.
 PY ?= python
 
-.PHONY: test lint sweep-smoke online-smoke bench-smoke obs-smoke serve-smoke
+.PHONY: test lint sweep-smoke online-smoke bench-smoke obs-smoke serve-smoke \
+	search-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -63,3 +64,13 @@ obs-smoke:
 		experiments/obs/bursty_tt__smoke__fifo__s0.ndjson \
 		-o experiments/obs/dashboard.html
 	PYTHONPATH=src $(PY) benchmarks/obs_overhead.py
+
+# adversarial-search smoke: a tiny deterministic hill-climb (8 evals, 20-node
+# fleet, invariants ON in every cell) gating (a) a valid resumable
+# experiments/SEARCH.json ledger, (b) zero invariant violations, (c) >=1
+# nonzero-regret regime, (d) byte-identical ledger on a from-scratch rerun;
+# then the check_invariants runtime guard on a 100-node bench-smoke cell
+search-smoke:
+	PYTHONPATH=src $(PY) benchmarks/scenario_search.py --smoke --fresh
+	PYTHONPATH=src $(PY) benchmarks/scenario_search.py --overhead \
+		--fleet-size 100 --gate 10

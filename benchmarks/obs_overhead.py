@@ -59,8 +59,7 @@ from repro.cluster.chaos import ChaosConfig  # noqa: E402
 from repro.cluster.experiment import (ExperimentConfig,  # noqa: E402
                                       run_scheduler)
 from repro.cluster.fleet import cell_seed  # noqa: E402
-from repro.cluster.scenarios import (scenario_chaos,  # noqa: E402
-                                     workload_for_seed)
+from repro.cluster.scenarios import make_spec  # noqa: E402
 from repro.cluster.workload import WorkloadConfig  # noqa: E402
 
 _counter = itertools.count()
@@ -87,9 +86,10 @@ def _smoke_cfg(obs_dir=None, frame_every: float = 60.0):
     env = ("bursty_tt", "smoke", 0)
     path = (None if obs_dir is None
             else f"{obs_dir}/smoke_{next(_counter)}.ndjson")
+    point = make_spec("bursty_tt", "smoke")
     return ExperimentConfig(
-        workload=workload_for_seed("smoke", cell_seed("workload", *env)),
-        chaos=scenario_chaos("bursty_tt", cell_seed("chaos", *env)),
+        workload=point.workload_for_seed(cell_seed("workload", *env)),
+        chaos=point.chaos_for_seed(cell_seed("chaos", *env)),
         seed=cell_seed("sim", *env), min_samples=32,
         obs_path=path, obs_frame_every=frame_every)
 

@@ -1,0 +1,221 @@
+"""Adversarial scenario search CLI + invariant-overhead guard.
+
+Three modes over ``repro.cluster.search``:
+
+* default — run/resume a budgeted search, writing ``experiments/SEARCH.json``
+  (atomic, resumable ledger) and ``experiments/SEARCH.md`` (worst-regime
+  ranking).  All search knobs are flags.
+
+* ``--smoke`` — the CI gate: a tiny serial search (8 evals x 1 seed on a
+  20-node fleet, invariants ON) that must produce (1) a structurally valid
+  ledger, (2) zero invariant violations across every evaluated cell, (3) at
+  least one nonzero-regret regime (the search surfaces *something*, in either
+  direction), and (4) a byte-identical SEARCH.json when re-run from scratch
+  into a temp dir (determinism is load-bearing: it is what makes the ledger
+  resumable).  Non-zero exit on any break.
+
+* ``--overhead`` — the ``check_invariants`` cost guard on the bench-smoke
+  cell (bursty_tt/smoke, fifo + atlas-fifo): paired on/off runs timed with
+  ``time.process_time`` (order alternating, gc reset between), gated on the
+  median per-pair overhead.  Same estimator rationale as
+  ``benchmarks/obs_overhead.py``: absolute wall times on shared runners swing
+  more than the effect; paired CPU-time deltas with a median center an A/A
+  control at ~0.  Up to ``--attempts`` independent tries; any within
+  ``--gate`` passes (noise storms are transient, regressions persist).
+
+    PYTHONPATH=src python benchmarks/scenario_search.py --smoke
+    PYTHONPATH=src python benchmarks/scenario_search.py --overhead \
+        --fleet-size 500 --gate 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import gc
+import pathlib
+import statistics
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from common import OUT, save_json  # noqa: E402
+
+from repro.cluster.experiment import (ExperimentConfig,  # noqa: E402
+                                      run_scheduler)
+from repro.cluster.scenarios import make_spec  # noqa: E402
+from repro.cluster.search import SearchConfig, run_search  # noqa: E402
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--smoke", action="store_true",
+                   help="CI preset + gates (see module docstring)")
+    p.add_argument("--overhead", action="store_true",
+                   help="gate check_invariants runtime overhead instead of "
+                        "searching")
+    p.add_argument("--budget", type=int, default=24)
+    p.add_argument("--seeds", type=int, default=2)
+    p.add_argument("--base", default="fifo")
+    p.add_argument("--scenario", default="baseline")
+    p.add_argument("--workload", default="smoke")
+    p.add_argument("--fleet-size", type=int, default=None,
+                   help="nodes per cell (default: 20; 500 for --overhead)")
+    p.add_argument("--scale", type=float, default=0.25)
+    p.add_argument("--restart-after", type=int, default=6)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--executor", default="process",
+                   choices=("serial", "process", "broker", "async"))
+    p.add_argument("--workers", type=int, default=None)
+    p.add_argument("--hazard", default="cluster",
+                   choices=("cluster", "per-node"))
+    p.add_argument("--no-invariants", action="store_true")
+    p.add_argument("--min-samples", type=int, default=150)
+    p.add_argument("--max-train", type=int, default=20000)
+    p.add_argument("--fresh", action="store_true",
+                   help="ignore an existing SEARCH.json instead of resuming")
+    p.add_argument("--out", default=str(OUT))
+    # --overhead knobs
+    p.add_argument("--pairs", type=int, default=5)
+    p.add_argument("--attempts", type=int, default=3)
+    p.add_argument("--gate", type=float, default=10.0,
+                   help="max median invariant overhead, percent")
+    return p
+
+
+def _search_config(args) -> SearchConfig:
+    return SearchConfig(
+        base=args.base, budget=args.budget, seeds=args.seeds,
+        fleet_size=args.fleet_size if args.fleet_size is not None else 20,
+        scenario=args.scenario, workload=args.workload, scale=args.scale,
+        restart_after=args.restart_after, seed=args.seed,
+        executor=args.executor, workers=args.workers, hazard=args.hazard,
+        check_invariants=not args.no_invariants,
+        min_samples=args.min_samples, max_train=args.max_train)
+
+
+# ---------------------------------------------------------------------------
+# --overhead: paired on/off timing of the bench-smoke cell
+# ---------------------------------------------------------------------------
+
+def _cell_cfg(fleet_size: int, check: bool) -> ExperimentConfig:
+    point = make_spec("bursty_tt", "smoke")
+    return ExperimentConfig(workload=point.workload_for_seed(11),
+                            chaos=point.chaos_for_seed(7), seed=3,
+                            fleet_size=fleet_size, min_samples=40,
+                            max_train=2000, check_invariants=check)
+
+
+def _time_cell(fleet_size: int, check: bool) -> float:
+    gc.collect()
+    t0 = time.process_time()
+    for sched in ("fifo", "atlas-fifo"):
+        run_scheduler(sched, _cell_cfg(fleet_size, check), with_trace=True)
+    return time.process_time() - t0
+
+
+def _overhead_attempt(fleet_size: int, pairs: int) -> dict:
+    deltas, offs = [], []
+    for i in range(pairs):
+        if i % 2 == 0:                       # alternate order pair-to-pair
+            off = _time_cell(fleet_size, False)
+            on = _time_cell(fleet_size, True)
+        else:
+            on = _time_cell(fleet_size, True)
+            off = _time_cell(fleet_size, False)
+        deltas.append(on - off)
+        offs.append(off)
+    off_med = statistics.median(offs)
+    return {"overhead_pct": 100.0 * statistics.median(deltas) / off_med,
+            "off_median_s": off_med,
+            "pair_deltas_s": [round(d, 4) for d in deltas]}
+
+
+def run_overhead(args) -> int:
+    fleet_size = args.fleet_size if args.fleet_size is not None else 500
+    attempts = []
+    ok = False
+    for a in range(args.attempts):
+        res = _overhead_attempt(fleet_size, args.pairs)
+        attempts.append(res)
+        print(f"[search-overhead] attempt {a + 1}/{args.attempts}: "
+              f"{res['overhead_pct']:+.2f}% "
+              f"(off median {res['off_median_s']:.2f}s, "
+              f"gate {args.gate:.1f}%)")
+        if res["overhead_pct"] <= args.gate:
+            ok = True
+            break
+    path = save_json("SEARCH_OVERHEAD", {
+        "fleet_size": fleet_size, "cell": "bursty_tt/smoke x fifo,atlas-fifo",
+        "gate_pct": args.gate, "pairs": args.pairs, "passed": ok,
+        "attempts": attempts})
+    print(f"[search-overhead] wrote {path}")
+    if not ok:
+        print(f"[search-overhead] FAIL: invariant overhead above "
+              f"{args.gate:.1f}% in all {args.attempts} attempts")
+        return 1
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# --smoke gates
+# ---------------------------------------------------------------------------
+
+def _gate(cond: bool, msg: str) -> bool:
+    if not cond:
+        print(f"[search-smoke] FAIL: {msg}")
+    return cond
+
+
+def run_smoke(args) -> int:
+    cfg = SearchConfig(budget=8, seeds=1, fleet_size=20, scenario="baseline",
+                       workload="smoke", executor="serial",
+                       check_invariants=True, min_samples=40, max_train=2000)
+    out_dir = pathlib.Path(args.out)
+    result = run_search(cfg, out_dir=out_dir, resume=not args.fresh)
+
+    ok = _gate(result["n_evals"] == cfg.budget
+               and len(result["evals"]) == cfg.budget
+               and result["best"] is not None,
+               "ledger incomplete")
+    violations = sum(e["violations"] for e in result["evals"])
+    ok &= _gate(violations == 0,
+                f"{violations} invariant violations across the search")
+    checks = sum(e["checks"] for e in result["evals"])
+    ok &= _gate(checks > 0, "invariant checker never ran")
+    ok &= _gate(any(e["regret"] != 0.0 for e in result["evals"]),
+                "no nonzero-regret regime surfaced")
+
+    # determinism: a from-scratch rerun must reproduce the ledger bytes
+    with tempfile.TemporaryDirectory() as tmp:
+        rerun = run_search(cfg, out_dir=tmp, log=lambda *a, **k: None)
+        a_bytes = (out_dir / "SEARCH.json").read_bytes()
+        b_bytes = (pathlib.Path(tmp) / "SEARCH.json").read_bytes()
+        ok &= _gate(a_bytes == b_bytes and rerun["best"] == result["best"],
+                    "rerun SEARCH.json differs (non-deterministic search)")
+
+    if ok:
+        print(f"[search-smoke] OK: {cfg.budget} evals, {checks} invariant "
+              f"checks, 0 violations, best regret "
+              f"{result['best']['regret']:+.3f}, deterministic ledger")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.overhead:
+        return run_overhead(args)
+    if args.smoke:
+        return run_smoke(args)
+    cfg = _search_config(args)
+    print(f"[search] {dataclasses.asdict(cfg)}")
+    result = run_search(cfg, out_dir=args.out, resume=not args.fresh)
+    best = result["best"]
+    print(f"[search] best regret {best['regret']:+.3f} at eval {best['i']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,11 @@
 from repro.cluster.chaos import ChaosConfig, ChaosInjector
-from repro.cluster.scenarios import (SCENARIOS, WORKLOAD_SHAPES, Scenario,
-                                     get_scenario, get_workload_shape,
-                                     scenario_chaos, workload_for_seed)
+from repro.cluster.invariants import InvariantChecker, InvariantViolation
+from repro.cluster.scenarios import (CHAOS_BOUNDS, SCENARIOS, WORKLOAD_BOUNDS,
+                                     WORKLOAD_SHAPES, Bound, Scenario,
+                                     ScenarioSpec, get_scenario, get_workload,
+                                     get_workload_shape, make_spec,
+                                     scenario_chaos, scenario_scope,
+                                     workload_for_seed)
 from repro.cluster.simulator import (
     DEFAULT_FLEET, MACHINE_TYPES, MAP, REDUCE, Job, Node, Simulator, Task,
 )
@@ -14,19 +18,27 @@ from repro.cluster.workload import WorkloadConfig, install, make_workload
 # repro.cluster.fleet`
 _FLEET_NAMES = ("CellSpec", "SweepSpec", "aggregate", "cell_seed", "expand",
                 "run_sweep", "sweep_json", "sweep_markdown")
+_SEARCH_NAMES = ("SearchConfig", "evaluate", "run_search", "search_json",
+                 "search_markdown")
 
 
 def __getattr__(name):
     if name in _FLEET_NAMES:
         from repro.cluster import fleet
         return getattr(fleet, name)
+    if name in _SEARCH_NAMES:
+        from repro.cluster import search
+        return getattr(search, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [
-    "ChaosConfig", "ChaosInjector", "DEFAULT_FLEET", "MACHINE_TYPES", "MAP",
-    "REDUCE", "Job", "Node", "SCENARIOS", "Scenario", "Simulator", "Task",
-    "FEATURE_NAMES", "N_FEATURES", "TelemetryTrace", "WORKLOAD_SHAPES",
-    "WorkloadConfig", "get_scenario", "get_workload_shape", "install",
-    "make_workload", "scenario_chaos", "workload_for_seed", *_FLEET_NAMES,
+    "Bound", "CHAOS_BOUNDS", "ChaosConfig", "ChaosInjector", "DEFAULT_FLEET",
+    "InvariantChecker", "InvariantViolation", "MACHINE_TYPES", "MAP",
+    "REDUCE", "Job", "Node", "SCENARIOS", "Scenario", "ScenarioSpec",
+    "Simulator", "Task", "FEATURE_NAMES", "N_FEATURES", "TelemetryTrace",
+    "WORKLOAD_BOUNDS", "WORKLOAD_SHAPES", "WorkloadConfig", "get_scenario",
+    "get_workload", "get_workload_shape", "install", "make_spec",
+    "make_workload", "scenario_chaos", "scenario_scope", "workload_for_seed",
+    *_FLEET_NAMES, *_SEARCH_NAMES,
 ]

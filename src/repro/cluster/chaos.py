@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
+from collections import defaultdict
 
 from repro.cluster import simulator as S
 
@@ -61,6 +62,11 @@ class ChaosInjector:
         self.rng = random.Random(self.cfg.seed)
         self.sim: S.Simulator | None = None
         self.events_fired = 0
+        # outage => recovery bookkeeping (read by the invariant checker):
+        # nid -> scheduled-but-unfired recovery closures.  Every injected
+        # outage schedules exactly one recovery, so a node stuck in an outage
+        # state with a zero count here is a lost-recovery bug.
+        self.pending_recoveries: dict[int, int] = defaultdict(int)
 
     def bind(self, sim: "S.Simulator"):
         self.sim = sim
@@ -119,7 +125,10 @@ class ChaosInjector:
     # --- helpers: all recoveries are scheduled closures via EV_CHAOS payloads
     def _recover_later(self, node, dt, *, tt=False, dn=False, net=False,
                        susp=False, health: float = 0.0):
+        self.pending_recoveries[node.nid] += 1
+
         def recover(_):
+            self.pending_recoveries[node.nid] -= 1
             if tt and not node.tt_alive:
                 node.tt_alive = True
                 node.restarts += 1

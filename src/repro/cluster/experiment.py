@@ -48,6 +48,10 @@ class ExperimentConfig:
     # with telemetry on or off.
     obs_path: str | None = None
     obs_frame_every: float = 60.0
+    # per-tick invariant checking (repro.cluster.invariants): violations are
+    # recorded (never raised) and surface in metrics["invariant_violations"];
+    # the checker only reads sim state, so decisions are unchanged
+    check_invariants: bool = False
 
 
 def _fleet_for(cfg: "ExperimentConfig"):
@@ -63,10 +67,15 @@ def _make_obs(cfg: ExperimentConfig):
 
 
 def _new_sim(scheduler, cfg: ExperimentConfig, trace) -> Simulator:
+    invariants = None
+    if cfg.check_invariants:
+        from repro.cluster.invariants import InvariantChecker
+        invariants = InvariantChecker()
     sim = Simulator(scheduler, fleet=_fleet_for(cfg), seed=cfg.seed,
                     heartbeat_interval=cfg.heartbeat_interval,
                     chaos=ChaosInjector(cfg.chaos), trace=trace,
-                    hazard_noise=cfg.hazard_noise, obs=_make_obs(cfg))
+                    hazard_noise=cfg.hazard_noise, obs=_make_obs(cfg),
+                    invariants=invariants)
     install(sim, make_workload(cfg.workload))
     return sim
 
@@ -99,7 +108,7 @@ def run_atlas(name: str, cfg: ExperimentConfig,
     if refresher is not None and sim.obs is not None:
         refresher.obs = sim.obs        # drift/lifecycle markers into frames
     metrics = sim.run()
-    metrics["atlas"] = sched.stats()
+    metrics["atlas"] = sched.stats().to_dict()
     if sim.obs is not None:
         metrics["obs"] = sim.obs.summary()
     return metrics, trace, sim
@@ -133,7 +142,7 @@ def run_scheduler(name: str, cfg: ExperimentConfig,
         metrics, trace, sim = run_baseline(name, cfg, with_trace=with_trace)
     else:
         metrics, trace, sim = run_atlas(base, cfg, predictor)
-    metrics["sched_stats"] = sim.scheduler.stats()
+    metrics["sched_stats"] = sim.scheduler.stats().to_dict()
     return metrics, trace, sim
 
 

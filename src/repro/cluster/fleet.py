@@ -76,8 +76,7 @@ import zlib
 
 from repro.cluster.experiment import (ExperimentConfig, atlas_base_name,
                                       run_scheduler)
-from repro.cluster.scenarios import (SCENARIOS, WORKLOAD_SHAPES,
-                                     scenario_chaos, workload_for_seed)
+from repro.cluster.scenarios import SCENARIOS, WORKLOAD_SHAPES, make_spec
 from repro.core.predictor import TaskPredictor
 
 # metrics reported in the ranking tables (subset of Simulator.metrics keys)
@@ -136,6 +135,7 @@ class SweepSpec:
     heartbeat_interval: float = 600.0
     min_samples: int = 150
     max_train: int = 20000
+    check_invariants: bool = False    # per-tick invariant checker in every cell
 
     def seed_indices(self) -> tuple:
         if isinstance(self.seeds, int):
@@ -147,6 +147,9 @@ class SweepSpec:
         d["seeds"] = list(self.seed_indices())
         for k in ("schedulers", "scenarios", "workloads", "fleet_sizes"):
             d[k] = list(d[k])
+        if not d["check_invariants"]:
+            # keep historical SWEEP.json spec bytes when the checker is off
+            d.pop("check_invariants")
         return d
 
 
@@ -191,20 +194,25 @@ def expand(spec: SweepSpec) -> list[CellSpec]:
 
 def cell_config(spec: SweepSpec, cell: CellSpec) -> ExperimentConfig:
     env = cell.env_key
+    # scenario/workload *names* resolve here, in the parent process, so
+    # temporarily registered search points (scenario_scope) work with the
+    # spawn process pool — workers receive fully resolved configs
+    point = make_spec(cell.scenario, cell.workload)
     # hazard mode rides on the chaos config; "cluster" (the default) leaves
     # the scenario's historical bytes untouched, "per-node" scales event
     # rates with fleet size so failure rates compare across --fleet-size
-    chaos = scenario_chaos(cell.scenario, cell_seed("chaos", *env))
+    chaos = point.chaos_for_seed(cell_seed("chaos", *env))
     if spec.hazard != "cluster":
         chaos = dataclasses.replace(chaos, hazard=spec.hazard)
     return ExperimentConfig(
-        workload=workload_for_seed(cell.workload, cell_seed("workload", *env)),
+        workload=point.workload_for_seed(cell_seed("workload", *env)),
         chaos=chaos,
         seed=cell_seed("sim", *env),
         heartbeat_interval=spec.heartbeat_interval,
         algo=spec.algo, threshold=spec.threshold,
         n_speculative=spec.n_speculative, min_samples=spec.min_samples,
-        max_train=spec.max_train, fleet_size=cell.fleet_size)
+        max_train=spec.max_train, fleet_size=cell.fleet_size,
+        check_invariants=spec.check_invariants)
 
 
 # ---------------------------------------------------------------------------
@@ -743,6 +751,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--registry", default=None,
                     help="model-registry dir: ship trained model versions "
                          "to ATLAS cells instead of raw trace arrays")
+    ap.add_argument("--check-invariants", action="store_true",
+                    help="run the per-tick invariant checker in every cell "
+                         "and stamp violation counts into cell metrics "
+                         "(repro.cluster.invariants)")
     ap.add_argument("--obs", action="store_true",
                     help="stream per-cell telemetry frames to <out>/obs/ and "
                          "stamp deterministic roll-ups under perf.obs "
@@ -768,7 +780,8 @@ def main(argv=None) -> int:
         workloads=tuple(args.workloads.split(",")),
         fleet_sizes=tuple(int(s) for s in args.fleet_sizes.split(",")),
         hazard=args.hazard,
-        algo=args.algo, min_samples=args.min_samples)
+        algo=args.algo, min_samples=args.min_samples,
+        check_invariants=args.check_invariants)
     try:
         expand(spec)
     except KeyError as e:

@@ -211,7 +211,7 @@ class Simulator:
     def __init__(self, scheduler, *, fleet=None, seed: int = 0,
                  heartbeat_interval: float = 600.0, task_timeout: float = 1800.0,
                  chaos=None, trace=None, time_limit: float = 10_000_000.0,
-                 hazard_noise: float = 0.55, obs=None):
+                 hazard_noise: float = 0.55, obs=None, invariants=None):
         self.rng = random.Random(seed)
         fleet = fleet or DEFAULT_FLEET
         self.nodes = [Node(i, MACHINE_TYPES[m]) for i, m in enumerate(fleet)]
@@ -246,6 +246,11 @@ class Simulator:
         self._known_alive: set = {n.nid for n in self.nodes}
 
         scheduler.bind(self)
+        # invariant checker (repro.cluster.invariants): read-only observer, so
+        # results are byte-identical with checking on or off
+        self.invariants = invariants
+        if invariants is not None:
+            invariants.bind(self)
         if obs is not None:
             obs.bind(self)
         for n in self.nodes:
@@ -347,6 +352,8 @@ class Simulator:
 
     # ------------------------------------------------------------------ actions
     def launch(self, task: Task, node: Node, *, speculative: bool = False) -> Attempt:
+        if self.invariants is not None:    # pre-mutation state is what L1-L3 check
+            self.invariants.check_launch(self, task, node, speculative)
         local = task.kind == REDUCE or node.nid in task.block_nodes
         dur, will_fail, fail_at, p_fail = self._attempt_outcome(
             task, node, local, speculative)
@@ -593,6 +600,13 @@ class Simulator:
         # event (a per-event method call costs ~10x as much).  Read-only —
         # never touches the RNG or any scheduling input.
         ev_counts = obs.event_counts if obs is not None else None
+        # invariant hot path inlined like the telemetry one: the E1/E2
+        # compares run on loop locals and the checker method is entered only
+        # on a violation or a sweep boundary
+        inv = self.invariants
+        inv_every = inv.sweep_interval if inv is not None else 0
+        inv_last = self.now
+        inv_events = 0
         while self._heap:
             t, _, kind, payload = heapq.heappop(self._heap)
             if t > self.time_limit:
@@ -611,12 +625,20 @@ class Simulator:
             elif kind == EV_RETRAIN:
                 self.scheduler.on_retrain()
             self.scheduler.on_tick()
+            if inv is not None:
+                inv_events += 1
+                if (t < inv_last or self.n_running_jobs < 0
+                        or inv_events % inv_every == 0):
+                    inv.on_event(self, inv_last)
+                inv_last = t
             if ev_counts is not None:
                 ev_counts[kind] += 1
                 if t >= obs.next_frame_t:
                     obs.maybe_frame(self)
             if self._done():
                 break
+        if inv is not None:
+            inv.finish(self, inv_events)
         if obs is not None:
             obs.finish(self)
         return self.metrics()
@@ -652,7 +674,7 @@ class Simulator:
         red_time = avg(t.done_time - t.first_submit for t in fin_r)
         # direct failures (retry budget exhausted) vs cascade (Fig. 2 teardown)
         direct_fail = [t for t in fail_t if t.failed_attempts >= t.max_attempts]
-        return {
+        out = {
             "jobs_total": len(jobs), "jobs_finished": len(fin_j),
             "jobs_failed": len(fail_j),
             "pct_jobs_failed": 100.0 * len(fail_j) / max(len(jobs), 1),
@@ -678,3 +700,7 @@ class Simulator:
             "hdfs_write_per_task": avg(t.hdfs_write for t in tasks),
             "sim_time": self.now,
         }
+        if self.invariants is not None:
+            out["invariant_checks"] = self.invariants.n_checks
+            out["invariant_violations"] = self.invariants.n_violations
+        return out

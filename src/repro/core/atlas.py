@@ -16,12 +16,32 @@ model retraining (every 10 simulated minutes, §5.1)."""
 
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 
 from repro.cluster.simulator import EV_RETRAIN, MAP
 from repro.core.heartbeat import HeartbeatController
 from repro.core.predictor import TaskPredictor
-from repro.sched.base import Scheduler
+from repro.sched.base import Scheduler, SchedulerStats
+
+
+@dataclasses.dataclass
+class AtlasStats(SchedulerStats):
+    """ATLAS's ``stats()`` schema: the shared counters plus Algorithm-1
+    accounting.  The refresher trio is ``None`` (omitted from ``to_dict``)
+    when no drift-aware refresh loop is attached, so cell stats stay
+    byte-identical whichever lifecycle ran the model."""
+    predictions: int = 0
+    predicted_fail: int = 0
+    relocations: int = 0
+    speculative_launches: int = 0
+    penalties: int = 0
+    dead_probes: int = 0
+    hb_adjustments: int = 0
+    model_fits: int = 0
+    refreshes: int | None = None
+    promotions: int | None = None
+    rollbacks: int | None = None
 
 
 class ATLASScheduler(Scheduler):
@@ -209,22 +229,26 @@ class ATLASScheduler(Scheduler):
             return None
         return cands[best]
 
-    def stats(self) -> dict:
-        return {
-            "launches": self.n_launches,
-            "speculative_copies": self.n_speculative_copies,
-            "predictions": self.n_predictions,
-            "predicted_fail": self.n_predicted_fail,
-            "relocations": self.n_relocations,
-            "speculative_launches": self.n_speculative_launches,
-            "penalties": self.n_penalties,
-            "dead_probes": self.n_dead_probes,
-            "hb_adjustments": self.hb.adjustments,
-            "model_fits": self.predictor.fits,
+    def stats(self) -> AtlasStats:
+        return AtlasStats(
+            launches=self.n_launches,
+            speculative_copies=self.n_speculative_copies,
+            predictions=self.n_predictions,
+            predicted_fail=self.n_predicted_fail,
+            relocations=self.n_relocations,
+            speculative_launches=self.n_speculative_launches,
+            penalties=self.n_penalties,
+            dead_probes=self.n_dead_probes,
+            hb_adjustments=self.hb.adjustments,
+            model_fits=self.predictor.fits,
             # NOTE: dispatch counters live on the predictor/broker, not here —
             # cell stats must be identical whichever batching executor ran them
             **({"refreshes": self.refresher.refreshes,
                 "promotions": self.refresher.promotions,
                 "rollbacks": self.refresher.rollbacks}
                if self.refresher is not None else {}),
-        }
+        )
+
+    def frame_stats(self) -> dict:
+        return {"penalty_box": len(self.penalty_box),
+                "pred": self.predictor.frame_stats()}

@@ -114,6 +114,14 @@ class TaskPredictor:
         """Scheduler-tick hook (no-op here).  The online BrokerPredictor uses
         it to snapshot the pending queue and prime one batched flush."""
 
+    def frame_stats(self) -> dict:
+        """Live accounting snapshot for the obs layer (``Scheduler.
+        frame_stats()["pred"]``).  The plain predictor has no memo, so the
+        memo counters are structurally zero; BrokerPredictor overrides with
+        its real accounting plus memo size/eviction fields."""
+        return {"dispatches": self.n_dispatches, "rows": self.n_rows_scored,
+                "memo_hits": 0, "memo_misses": 0, "demand_rows": 0}
+
     def p_success(self, sim, task, node, speculative=False) -> float:
         if self.model_for_kind(task.kind) is None:
             return 1.0                  # untrained: skip feature construction

@@ -213,14 +213,17 @@ class SimObserver:
         c[self.h_failures] += d_fail_sum
         g[self.h_occ] = occ
         g[self.h_pending] = float(len(sim.pending))
-        pb = getattr(sim.scheduler, "penalty_box", ())
-        g[self.h_penalty] = float(len(pb))
+        # typed scheduler snapshot (PR 8): the one sanctioned window into
+        # scheduler state — no more getattr-ing scheduler internals here
+        sched_fs = sim.scheduler.frame_stats()
+        pb_len = sched_fs["penalty_box"]
+        g[self.h_penalty] = float(pb_len)
         g[self.h_running_jobs] = float(sim.n_running_jobs)
         g[self.h_alive] = float(len(sim._known_alive))
         g[self.h_stale_max] = hb_max
         g[self.h_stale_mean] = hb_sum / n
         m.observe(self.h_occ_hist, occ)
-        pred = self._pred_stats(sim)
+        pred = sched_fs["pred"]
         if pred is not None and pred["demand_rows"]:
             g[self.h_memo_rate] = pred["memo_hits"] / pred["demand_rows"]
         if pred is not None and "memo_size" in pred:
@@ -236,7 +239,7 @@ class SimObserver:
                 "occ": _round(occ),
                 "running": running_sum,
                 "pending": len(sim.pending),
-                "penalty_box": len(pb),
+                "penalty_box": pb_len,
                 "running_jobs": sim.n_running_jobs,
                 "alive": len(sim._known_alive),
                 "hb_stale_max": _round(hb_max),
@@ -251,21 +254,6 @@ class SimObserver:
                 frame["events"] = self._events_pending
                 self._events_pending = []
             self.sink.emit(frame)
-
-    def _pred_stats(self, sim) -> dict | None:
-        pred = getattr(sim.scheduler, "predictor", None)
-        if pred is None:
-            return None
-        out = {"dispatches": pred.n_dispatches, "rows": pred.n_rows_scored}
-        if hasattr(pred, "n_memo_hits"):      # BrokerPredictor accounting
-            out.update(memo_hits=pred.n_memo_hits,
-                       memo_misses=pred.n_memo_misses,
-                       demand_rows=pred.n_demand_rows,
-                       memo_size=len(getattr(pred, "_memo", ())),
-                       memo_evictions=getattr(pred, "n_memo_evictions", 0))
-        else:
-            out.update(memo_hits=0, memo_misses=0, demand_rows=0)
-        return out
 
     def _fold_events(self):
         """Copy the sim-maintained cumulative event counts into the registry

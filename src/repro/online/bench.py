@@ -90,13 +90,14 @@ def build_stream(workload: str = "smoke", scenario: str = "bursty_tt",
     class)."""
     from repro.cluster.experiment import ExperimentConfig, run_scheduler
     from repro.cluster.fleet import cell_seed
-    from repro.cluster.scenarios import scenario_chaos, workload_for_seed
+    from repro.cluster.scenarios import make_spec
 
     env = ((scenario, workload, f"n{fleet_size}", seed) if fleet_size
            else (scenario, workload, seed))
+    point = make_spec(scenario, workload)
     cfg = ExperimentConfig(
-        workload=workload_for_seed(workload, cell_seed("workload", *env)),
-        chaos=scenario_chaos(scenario, cell_seed("chaos", *env)),
+        workload=point.workload_for_seed(cell_seed("workload", *env)),
+        chaos=point.chaos_for_seed(cell_seed("chaos", *env)),
         seed=cell_seed("sim", *env), min_samples=32, fleet_size=fleet_size)
     _, trace, _ = run_scheduler("fifo", cfg, with_trace=True)
     (mx, my), (rx, ry) = trace.datasets()

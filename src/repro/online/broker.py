@@ -376,6 +376,16 @@ class BrokerPredictor(TaskPredictor):
         self.n_memo_misses = 0
         self.n_memo_evictions = 0
 
+    def frame_stats(self) -> dict:
+        # field order matters: NDJSON frame bytes must match the obs layer's
+        # historical per-frame pred dict exactly
+        return {"dispatches": self.n_dispatches, "rows": self.n_rows_scored,
+                "memo_hits": self.n_memo_hits,
+                "memo_misses": self.n_memo_misses,
+                "demand_rows": self.n_demand_rows,
+                "memo_size": len(self._memo),
+                "memo_evictions": self.n_memo_evictions}
+
     # ------------------------------------------------------------ tick hooks
     def begin_tick(self, sim, extra_keys=()):
         self._memo.clear()

@@ -7,9 +7,31 @@ baseline."""
 
 from __future__ import annotations
 
+import dataclasses
 from collections import defaultdict
 
 from repro.cluster.simulator import MAP, Node, Task
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """The documented ``Scheduler.stats()`` schema, shared by all four
+    schedulers (FIFO/Fair/Capacity return exactly these two counters; ATLAS
+    returns the :class:`repro.core.atlas.AtlasStats` extension).
+
+    launches            every attempt handed to ``Simulator.launch``
+    speculative_copies  redundant copies among them, whatever the trigger
+                        (straggler speculation here; predicted-failure
+                        replication under ATLAS)
+    """
+    launches: int = 0
+    speculative_copies: int = 0
+
+    def to_dict(self) -> dict:
+        """JSON-ready form: field order, ``None``-valued optional extension
+        fields omitted — byte-compatible with the pre-PR8 ad-hoc dicts."""
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None}
 
 
 class Scheduler:
@@ -74,14 +96,18 @@ class Scheduler:
         self.n_speculative_copies += int(speculative)
         return self.sim.launch(task, node, speculative=speculative)
 
-    def stats(self) -> dict:
+    def stats(self) -> SchedulerStats:
         """Uniform per-run counters every scheduler exposes; the fleet sweep
-        surfaces these per cell (ATLAS extends with its Algorithm-1 stats).
-        speculative_copies counts every redundant copy launched, whatever the
-        trigger (straggler speculation here; also predicted-failure replication
-        under ATLAS)."""
-        return {"launches": self.n_launches,
-                "speculative_copies": self.n_speculative_copies}
+        surfaces ``stats().to_dict()`` per cell (ATLAS extends the schema
+        with its Algorithm-1 counters — see :class:`SchedulerStats`)."""
+        return SchedulerStats(launches=self.n_launches,
+                              speculative_copies=self.n_speculative_copies)
+
+    def frame_stats(self) -> dict:
+        """Cheap live-state snapshot for the obs layer's per-frame gather:
+        ``{"penalty_box": int, "pred": dict | None}``.  Base schedulers have
+        no penalty box and no predictor; ATLAS overrides both fields."""
+        return {"penalty_box": 0, "pred": None}
 
     # --- policy body
     def schedule(self):

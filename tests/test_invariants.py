@@ -1,0 +1,155 @@
+"""Per-tick scheduler invariants (PR 8): clean runs stay clean, corrupted
+state is caught, and the checker never changes simulation results."""
+
+import pytest
+
+from repro.cluster.chaos import ChaosConfig, ChaosInjector
+from repro.cluster.experiment import ExperimentConfig, run_scheduler
+from repro.cluster.invariants import InvariantChecker, InvariantViolation
+from repro.cluster.scenarios import make_spec
+from repro.cluster.simulator import Simulator
+from repro.cluster.workload import WorkloadConfig, install, make_workload
+from repro.sched.base import FIFOScheduler
+
+TINY = WorkloadConfig(n_single=4, n_chains=1, chain_len_range=(2, 3),
+                      maps_range=(2, 4), reduces_range=(1, 3),
+                      submit_horizon=1800.0, seed=5)
+
+
+def _run_sim(*, invariants=None, seed=2):
+    sim = Simulator(FIFOScheduler(), seed=seed,
+                    chaos=ChaosInjector(ChaosConfig(seed=seed + 100)),
+                    invariants=invariants)
+    install(sim, make_workload(TINY))
+    metrics = sim.run()
+    return sim, metrics
+
+
+def test_clean_run_has_zero_violations_and_counts_checks():
+    inv = InvariantChecker()
+    sim, metrics = _run_sim(invariants=inv)
+    assert metrics["invariant_violations"] == 0
+    assert metrics["invariant_checks"] > 0
+    assert inv.n_sweeps >= 1                 # at least the end-of-run sweep
+    assert inv.summary()["examples"] == []
+
+
+def test_metrics_keys_absent_without_checker():
+    _, metrics = _run_sim()
+    assert "invariant_checks" not in metrics
+    assert "invariant_violations" not in metrics
+
+
+def test_checker_never_changes_results():
+    _, plain = _run_sim()
+    _, checked = _run_sim(invariants=InvariantChecker())
+    checked = {k: v for k, v in checked.items()
+               if not k.startswith("invariant_")}
+    assert checked == plain
+
+
+def test_sweep_interval_scales_with_fleet():
+    inv = InvariantChecker(sweep_every=128)
+    cfg = ExperimentConfig(workload=TINY, seed=1, fleet_size=500,
+                           min_samples=40, max_train=2000)
+    from repro.cluster.experiment import _new_sim
+    sim = _new_sim(FIFOScheduler(), cfg, None)
+    inv.bind(sim)
+    assert inv.sweep_interval == 1000        # 2 * n_nodes dominates
+
+
+# ---------------------------------------------------------------------------
+# corruption detection: each invariant family trips on a seeded bug
+# ---------------------------------------------------------------------------
+
+def test_full_sweep_catches_slot_corruption():
+    inv = InvariantChecker()
+    sim, _ = _run_sim(invariants=inv)
+    assert inv.n_violations == 0
+    sim.nodes[0].running_maps += 1           # running set no longer matches
+    inv.full_sweep(sim)
+    names = {v["invariant"] for v in inv.violations}
+    assert "running_set_mismatch" in names
+
+
+def test_full_sweep_catches_stale_free_index():
+    inv = InvariantChecker()
+    sim, _ = _run_sim(invariants=inv)
+    node = sim.nodes[1]
+    node.running_maps = node.spec.map_slots  # full, but index still lists it
+    sim._free_map.add(node.nid)
+    inv.full_sweep(sim)
+    names = {v["invariant"] for v in inv.violations}
+    assert {"free_map_index_stale", "running_set_mismatch"} & names
+
+
+def test_full_sweep_catches_counter_regression():
+    inv = InvariantChecker()
+    sim, _ = _run_sim(invariants=inv)
+    sim.nodes[2].finished_count = -1
+    inv.full_sweep(sim)
+    assert any(v["invariant"] == "node_counter_regression"
+               for v in inv.violations)
+
+
+def test_full_sweep_catches_outage_without_recovery():
+    inv = InvariantChecker()
+    sim, _ = _run_sim(invariants=inv)
+    node = sim.nodes[3]
+    node.suspended = True                    # outage with no recovery queued
+    sim.chaos.pending_recoveries.pop(node.nid, None)
+    inv.full_sweep(sim)
+    assert any(v["invariant"] == "outage_without_recovery"
+               for v in inv.violations)
+
+
+def test_check_launch_catches_dead_node_and_bad_status():
+    inv = InvariantChecker()
+    sim, _ = _run_sim(invariants=inv)
+    task = next(t for j in sim.jobs.values() for t in j.tasks.values())
+    node = sim.nodes[0]
+    node.running_maps = node.running_reduces = 0
+    node.known_alive = node.tt_alive = False
+    task.status = "pending"
+    inv.check_launch(sim, task, node, False)
+    assert any(v["invariant"] == "launch_on_dead_node"
+               for v in inv.violations)
+    before = inv.n_violations
+    task.status = "finished"                 # neither pending nor running
+    inv.check_launch(sim, task, node, True)
+    assert any(v["invariant"] == "speculative_copy_of_nonrunning"
+               for v in inv.violations[before:]) or inv.n_violations > before
+
+
+def test_raise_on_violation_raises():
+    inv = InvariantChecker(raise_on_violation=True)
+    sim, _ = _run_sim(invariants=inv)
+    sim.nodes[0].running_maps += 1
+    with pytest.raises(InvariantViolation, match="running_set_mismatch"):
+        inv.full_sweep(sim)
+
+
+def test_examples_are_bounded():
+    inv = InvariantChecker(max_examples=2)
+    sim, _ = _run_sim(invariants=inv)
+    for n in sim.nodes:
+        n.finished_count = -1
+    inv.full_sweep(sim)
+    assert inv.n_violations >= len(sim.nodes)
+    assert len(inv.violations) == 2
+
+
+# ---------------------------------------------------------------------------
+# plumbing: the fleet flag reaches every cell
+# ---------------------------------------------------------------------------
+
+def test_experiment_config_plumbs_checker_through_atlas():
+    point = make_spec("bursty_tt", "smoke")
+    cfg = ExperimentConfig(workload=point.workload_for_seed(1),
+                           chaos=point.chaos_for_seed(2), seed=1,
+                           min_samples=40, max_train=2000,
+                           check_invariants=True)
+    metrics, _, sim = run_scheduler("atlas-fifo", cfg)
+    assert sim.invariants is not None
+    assert metrics["invariant_violations"] == 0
+    assert metrics["invariant_checks"] > 0

@@ -281,7 +281,10 @@ def test_sim_observer_memory_sink_collapses_idle_gaps():
         n_running_jobs = 0
         heartbeat_interval = 600.0
         _known_alive = {0}
-        scheduler = type("Sch", (), {"name": "fifo"})()
+        scheduler = type("Sch", (), {
+            "name": "fifo",
+            "frame_stats": lambda self: {"penalty_box": 0, "pred": None},
+        })()
         now = 0.0
 
     sink = MemorySink()

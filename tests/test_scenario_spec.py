@@ -1,0 +1,192 @@
+"""Typed scenario-space API (PR 8): ScenarioSpec round-trips, bounds,
+search moves, scoped registration, deprecated wrappers, and the shared
+SchedulerStats schema."""
+
+import dataclasses
+import random
+
+import pytest
+
+from repro.cluster.chaos import ChaosConfig
+from repro.cluster.scenarios import (CHAOS_BOUNDS, SCENARIOS, WEIGHT_FIELDS,
+                                     WORKLOAD_BOUNDS, WORKLOAD_SHAPES,
+                                     Scenario, ScenarioSpec, get_scenario,
+                                     get_workload, get_workload_shape,
+                                     make_spec, scenario_chaos,
+                                     scenario_scope, workload_for_seed)
+
+
+def _in_bound(value, b):
+    if b.kind == "span":
+        lo, hi = value
+        return b.lo <= lo <= hi <= b.hi
+    return b.lo <= value <= b.hi
+
+
+# ---------------------------------------------------------------------------
+# serialisation
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_identity_named_scenarios():
+    for name in SCENARIOS:
+        spec = make_spec(name, "smoke")
+        again = ScenarioSpec.from_dict(spec.to_dict())
+        assert again == spec
+        # tuple fields must come back as tuples, not JSON lists
+        assert isinstance(again.chaos.burst_size, tuple)
+        assert isinstance(again.workload.maps_range, tuple)
+
+
+def test_from_dict_rejects_unknown_fields():
+    d = make_spec("baseline").to_dict()
+    d["chaos"]["warp_drive"] = 1.0
+    with pytest.raises(ValueError, match="warp_drive"):
+        ScenarioSpec.from_dict(d)
+
+
+def test_validate_catches_bad_points():
+    base = make_spec("baseline")
+    overweight = dataclasses.replace(
+        base, chaos=dataclasses.replace(base.chaos, kill_tt=0.9, net_slow=0.9))
+    with pytest.raises(ValueError, match="weights sum"):
+        overweight.validate()
+    bad_span = dataclasses.replace(
+        base, workload=dataclasses.replace(base.workload, maps_range=(9, 2)))
+    with pytest.raises(ValueError, match="maps_range"):
+        bad_span.validate()
+
+
+# ---------------------------------------------------------------------------
+# search moves
+# ---------------------------------------------------------------------------
+
+def test_perturb_deterministic_and_within_bounds():
+    spec = make_spec("baseline", "smoke")
+    for seed in range(25):
+        a = spec.perturb(random.Random(seed))
+        b = spec.perturb(random.Random(seed))
+        assert a == b, "perturb must be a pure function of the rng state"
+        for fname, bound in CHAOS_BOUNDS.items():
+            if getattr(a.chaos, fname) != getattr(spec.chaos, fname):
+                assert _in_bound(getattr(a.chaos, fname), bound), fname
+        for fname, bound in WORKLOAD_BOUNDS.items():
+            if getattr(a.workload, fname) != getattr(spec.workload, fname):
+                assert _in_bound(getattr(a.workload, fname), bound), fname
+        a.validate()
+
+
+def test_sample_within_bounds_and_valid():
+    for seed in range(25):
+        s = ScenarioSpec.sample(random.Random(seed))
+        for fname, bound in CHAOS_BOUNDS.items():
+            if fname in WEIGHT_FIELDS:
+                continue               # weights may be renormalised below lo
+            assert _in_bound(getattr(s.chaos, fname), bound), fname
+        for fname, bound in WORKLOAD_BOUNDS.items():
+            assert _in_bound(getattr(s.workload, fname), bound), fname
+        s.validate()
+        assert sum(getattr(s.chaos, f) for f in WEIGHT_FIELDS) <= 1.0 + 1e-9
+
+
+def test_perturb_moves_something():
+    spec = make_spec("baseline", "smoke")
+    assert any(spec.perturb(random.Random(s)) != spec for s in range(5))
+
+
+# ---------------------------------------------------------------------------
+# registries + scoped registration
+# ---------------------------------------------------------------------------
+
+def test_make_spec_combines_registries():
+    spec = make_spec("bursty_tt", "map_heavy")
+    assert spec.chaos == SCENARIOS["bursty_tt"].chaos
+    assert spec.workload == WORKLOAD_SHAPES["map_heavy"]
+
+
+def test_get_workload_unknown_lists_known():
+    with pytest.raises(KeyError, match="smoke"):
+        get_workload("nope")
+
+
+def test_scenario_scope_registers_and_cleans_up():
+    point = ScenarioSpec.sample(random.Random(3), name="synthetic-pt")
+    with scenario_scope(point) as (s_name, w_name):
+        assert s_name == w_name == "synthetic-pt"
+        assert SCENARIOS[s_name] is point
+        assert WORKLOAD_SHAPES[w_name] is point.workload
+        assert make_spec(s_name, w_name) == dataclasses.replace(point)
+    assert "synthetic-pt" not in SCENARIOS
+    assert "synthetic-pt" not in WORKLOAD_SHAPES
+
+
+def test_scenario_scope_rejects_collisions_and_cleans_on_error():
+    point = ScenarioSpec.sample(random.Random(3), name="baseline")
+    with pytest.raises(ValueError, match="already registered"):
+        with scenario_scope(point):
+            pass
+    point2 = ScenarioSpec.sample(random.Random(4), name="synthetic-err")
+    with pytest.raises(RuntimeError):
+        with scenario_scope(point2):
+            raise RuntimeError("boom")
+    assert "synthetic-err" not in SCENARIOS
+
+
+# ---------------------------------------------------------------------------
+# deprecated pre-PR8 names: warn AND agree with the typed API
+# ---------------------------------------------------------------------------
+
+def test_scenario_subclass_warns():
+    with pytest.deprecated_call():
+        Scenario(name="x", description="", chaos=ChaosConfig())
+
+
+def test_scenario_chaos_wrapper():
+    with pytest.deprecated_call():
+        old = scenario_chaos("bursty_tt", 17)
+    assert old == get_scenario("bursty_tt").chaos_for_seed(17)
+
+
+def test_get_workload_shape_wrapper():
+    with pytest.deprecated_call():
+        old = get_workload_shape("smoke")
+    assert old == get_workload("smoke")
+
+
+def test_workload_for_seed_wrapper():
+    with pytest.deprecated_call():
+        old = workload_for_seed("smoke", 99)
+    assert old == make_spec("baseline", "smoke").workload_for_seed(99)
+
+
+# ---------------------------------------------------------------------------
+# SchedulerStats: one typed schema for all four schedulers
+# ---------------------------------------------------------------------------
+
+def test_scheduler_stats_schema():
+    from repro.sched.base import BASELINES, SchedulerStats
+    for name, cls in BASELINES.items():
+        stats = cls().stats()
+        assert isinstance(stats, SchedulerStats)
+        assert stats.to_dict() == {"launches": 0, "speculative_copies": 0}
+        fs = cls().frame_stats()
+        assert fs == {"penalty_box": 0, "pred": None}
+
+
+def test_atlas_stats_extends_base_schema():
+    from repro.core.atlas import ATLASScheduler, AtlasStats
+    from repro.sched.base import BASELINES, SchedulerStats
+    sched = ATLASScheduler(BASELINES["fifo"]())
+    stats = sched.stats()
+    assert isinstance(stats, AtlasStats)
+    assert isinstance(stats, SchedulerStats)
+    d = stats.to_dict()
+    # exact historical metrics["atlas"] keys, in order (ledger compatibility)
+    assert list(d) == ["launches", "speculative_copies", "predictions",
+                      "predicted_fail", "relocations", "speculative_launches",
+                      "penalties", "dead_probes", "hb_adjustments",
+                      "model_fits"]
+    # refresher trio appears only when a drift refresher is attached
+    assert "refreshes" not in d
+    fs = sched.frame_stats()
+    assert fs["penalty_box"] == 0
+    assert set(fs["pred"]) >= {"dispatches", "rows"}

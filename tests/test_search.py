@@ -1,0 +1,125 @@
+"""Adversarial scenario search (PR 8): move generation, acceptance state,
+regret objective, ledger determinism, and bit-for-bit resume."""
+
+import json
+
+import pytest
+
+from repro.cluster.scenarios import ScenarioSpec
+from repro.cluster.search import (SearchConfig, _accepts, _advance,
+                                  _fresh_state, _propose, regret_for,
+                                  run_search, search_json, search_markdown)
+
+FAST = dict(budget=2, seeds=1, fleet_size=0, workload="smoke",
+            executor="serial", min_samples=40, max_train=2000)
+
+
+def _rec(i, regret, origin="perturb", accepted=False, point=None):
+    point = point or ScenarioSpec.sample(__import__("random").Random(i))
+    return {"i": i, "origin": origin, "point": point.to_dict(),
+            "regret": regret, "per_seed": [regret], "violations": 0,
+            "checks": 1, "accepted": accepted, "best_so_far": regret}
+
+
+# ---------------------------------------------------------------------------
+# objective
+# ---------------------------------------------------------------------------
+
+def test_regret_positive_when_atlas_worse():
+    cfg = SearchConfig()
+    base = {"pct_tasks_failed": 10.0, "pct_jobs_failed": 5.0,
+            "sim_time": 1000.0}
+    atlas = {"pct_tasks_failed": 14.0, "pct_jobs_failed": 7.0,
+             "sim_time": 1100.0}
+    # 1*(14-10) + 1*(7-5) + 0.25*100*(1100-1000)/1000 = 4 + 2 + 2.5
+    assert regret_for(base, atlas, cfg) == pytest.approx(8.5)
+    assert regret_for(atlas, base, cfg) < 0       # symmetric sign
+
+
+def test_regret_weights():
+    cfg = SearchConfig(w_tasks=0.0, w_jobs=0.0, w_makespan=1.0)
+    base = {"pct_tasks_failed": 10.0, "pct_jobs_failed": 5.0,
+            "sim_time": 2000.0}
+    atlas = {"pct_tasks_failed": 99.0, "pct_jobs_failed": 99.0,
+             "sim_time": 2200.0}
+    assert regret_for(base, atlas, cfg) == pytest.approx(10.0)
+
+
+# ---------------------------------------------------------------------------
+# climb state machine (pure logic, no sims)
+# ---------------------------------------------------------------------------
+
+def test_propose_init_then_perturb_then_restart():
+    cfg = SearchConfig(restart_after=2, scenario="baseline", workload="smoke")
+    state = _fresh_state()
+    point, origin = _propose(state, cfg, 0)
+    assert origin == "init" and point.name == "baseline"
+    _advance(state, _rec(0, 1.0, origin="init", accepted=True, point=point))
+    _, origin = _propose(state, cfg, 1)
+    assert origin == "perturb"
+    _advance(state, _rec(1, 0.5))            # two non-improving evals...
+    _advance(state, _rec(2, 0.2))
+    assert state["since_improve"] == 2
+    p3, origin = _propose(state, cfg, 3)
+    assert origin == "restart"               # ...trigger a restart
+    p3b, _ = _propose(state, cfg, 3)
+    assert p3 == p3b                         # moves are pure functions of i
+
+
+def test_accepts_greedy_with_unconditional_restarts():
+    state = _fresh_state()
+    assert _accepts(state, "init", -99.0)
+    state["cur_regret"] = 5.0
+    assert not _accepts(state, "perturb", 5.0)   # ties rejected
+    assert _accepts(state, "perturb", 5.1)
+    assert _accepts(state, "restart", -99.0)     # restarts always move
+
+
+def test_advance_tracks_best_across_rejections():
+    state = _fresh_state()
+    _advance(state, _rec(0, 1.0, origin="init", accepted=True))
+    _advance(state, _rec(1, 7.0))            # rejected but still the worst seen
+    _advance(state, _rec(2, 3.0))
+    assert state["best"]["regret"] == 7.0
+    assert state["cur_regret"] == 1.0
+    assert state["since_improve"] == 2
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: deterministic, resumable ledger (tiny real sweeps)
+# ---------------------------------------------------------------------------
+
+def test_search_ledger_deterministic_and_resumable(tmp_path):
+    cfg = SearchConfig(**FAST)
+    a = run_search(cfg, out_dir=tmp_path / "a", log=lambda *x: None)
+    b = run_search(cfg, out_dir=tmp_path / "b", log=lambda *x: None)
+    assert search_json(a) == search_json(b)
+    assert (tmp_path / "a" / "SEARCH.json").read_bytes() == \
+        (tmp_path / "b" / "SEARCH.json").read_bytes()
+
+    # interrupted search: 1 eval now, budget extended to 2 on resume
+    short = SearchConfig(**{**FAST, "budget": 1})
+    run_search(short, out_dir=tmp_path / "c", log=lambda *x: None)
+    resumed = run_search(cfg, out_dir=tmp_path / "c", log=lambda *x: None)
+    assert search_json(resumed) == search_json(a)
+
+    data = json.loads((tmp_path / "a" / "SEARCH.json").read_text())
+    assert data["n_evals"] == 2
+    assert [e["i"] for e in data["evals"]] == [0, 1]
+    assert data["evals"][0]["origin"] == "init"
+    assert data["best"]["regret"] == max(e["regret"] for e in data["evals"])
+    assert data["ranking"][0]["regret"] == data["best"]["regret"]
+    assert all(e["violations"] == 0 for e in data["evals"])
+    md = search_markdown(data)
+    assert "| rank |" in md and "Worst regime" in md
+
+
+def test_resume_rejects_divergent_config(tmp_path):
+    cfg = SearchConfig(**FAST)
+    run_search(cfg, out_dir=tmp_path, log=lambda *x: None)
+    other = SearchConfig(**{**FAST, "scale": 0.5})
+    with pytest.raises(ValueError, match="different SearchConfig"):
+        run_search(other, out_dir=tmp_path, log=lambda *x: None)
+    # budget/executor/workers are operational: resume must tolerate them
+    more = SearchConfig(**{**FAST, "workers": 2})
+    run_search(more, out_dir=tmp_path, log=lambda *x: None)

@@ -1,0 +1,88 @@
+"""Property tests (hypothesis) over the scenario space and the chaos/invariant
+contract: perturbations stay in bounds, serialisation round-trips, and every
+fired outage schedules a matching recovery."""
+
+import random
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.chaos import ChaosConfig, ChaosInjector
+from repro.cluster.invariants import InvariantChecker
+from repro.cluster.scenarios import (CHAOS_BOUNDS, SCENARIOS, WEIGHT_FIELDS,
+                                     WORKLOAD_BOUNDS, ScenarioSpec, make_spec)
+from repro.cluster.simulator import Simulator
+from repro.cluster.workload import WorkloadConfig, install, make_workload
+from repro.sched.base import FIFOScheduler
+
+
+def _check_bounds(spec: ScenarioSpec):
+    for fname, b in CHAOS_BOUNDS.items():
+        v = getattr(spec.chaos, fname)
+        if fname in WEIGHT_FIELDS:
+            assert 0.0 <= v <= b.hi            # renorm may push below b.lo
+        elif b.kind == "span":
+            assert b.lo <= v[0] <= v[1] <= b.hi
+        else:
+            assert b.lo <= v <= b.hi
+    for fname, b in WORKLOAD_BOUNDS.items():
+        v = getattr(spec.workload, fname)
+        if b.kind == "span":
+            assert b.lo <= v[0] <= v[1] <= b.hi
+        else:
+            assert b.lo <= v <= b.hi
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(0.05, 1.0),
+       start=st.sampled_from(sorted(SCENARIOS)))
+def test_perturb_stays_within_bounds_and_valid(seed, scale, start):
+    spec = make_spec(start, "smoke")
+    moved = spec
+    rng = random.Random(seed)
+    for _ in range(4):                         # chained moves stay legal too
+        moved = moved.perturb(rng, scale)
+        _check_bounds(moved)
+        moved.validate()
+        mass = sum(getattr(moved.chaos, f) for f in WEIGHT_FIELDS)
+        assert mass <= 1.0 + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sampled_spec_roundtrips_exactly(seed):
+    spec = ScenarioSpec.sample(random.Random(seed))
+    _check_bounds(spec)
+    assert ScenarioSpec.from_dict(spec.to_dict()) == spec
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       intensity=st.floats(1.0, 10.0),
+       burst_prob=st.floats(0.0, 0.4))
+def test_every_outage_schedules_matching_recovery(seed, intensity, burst_prob):
+    """Run a storm under the invariant checker in raise mode: no predicate —
+    including outage=>recovery on every sweep — may fail, and once the event
+    heap drains every recovery must have fired."""
+    chaos = ChaosInjector(ChaosConfig(seed=seed, intensity=intensity,
+                                      burst_prob=burst_prob,
+                                      mean_outage=400.0))
+    inv = InvariantChecker(raise_on_violation=True, sweep_every=32)
+    sim = Simulator(FIFOScheduler(), seed=seed, chaos=chaos, invariants=inv)
+    install(sim, make_workload(WorkloadConfig(
+        n_single=3, n_chains=0, maps_range=(2, 3), reduces_range=(1, 2),
+        submit_horizon=900.0, seed=seed)))
+    sim.run()
+    assert chaos.events_fired >= 0
+    # the run ends when the workload drains, not when the heap is empty, so
+    # recoveries may still be queued — but never *negative*, and any node
+    # still in an outage state must have one pending
+    for nid, n_pending in chaos.pending_recoveries.items():
+        assert n_pending >= 0, f"node {nid} over-drained its recoveries"
+    for n in sim.nodes:
+        if not n.tt_alive or not n.dn_alive or n.suspended \
+                or n.net_quality < 1.0:
+            assert chaos.pending_recoveries[n.nid] >= 1
