@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test lint sweep-smoke online-smoke bench-smoke obs-smoke serve-smoke \
-	search-smoke
+	search-smoke live-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -64,6 +64,15 @@ obs-smoke:
 		experiments/obs/bursty_tt__smoke__fifo__s0.ndjson \
 		-o experiments/obs/dashboard.html
 	PYTHONPATH=src $(PY) benchmarks/obs_overhead.py
+
+# live-telemetry smoke: the smoke fleet matrix streamed to a live
+# TelemetryCollector over tcp:// while a poller curls /delta mid-run —
+# gates SWEEP.json byte-parity with the wire on, a nonzero-frame /snapshot,
+# gapless delta seqs that replay to the live aggregates (wire == NDJSON),
+# and live-wire overhead <=5% on the bench-smoke cell; stamps live stats
+# into experiments/BENCH_<pr>.json
+live-smoke:
+	PYTHONPATH=src $(PY) benchmarks/live_overhead.py
 
 # adversarial-search smoke: a tiny deterministic hill-climb (8 evals, 20-node
 # fleet, invariants ON in every cell) gating (a) a valid resumable

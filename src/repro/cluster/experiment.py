@@ -48,6 +48,12 @@ class ExperimentConfig:
     # with telemetry on or off.
     obs_path: str | None = None
     obs_frame_every: float = 60.0
+    # live telemetry wire: stream the same frames to a serving AsyncBroker /
+    # TelemetryCollector over inproc://‌ or tcp:// (repro.obs.TransportSink).
+    # obs_source names this run on the wire (fleet uses the cell id).  The
+    # live path observes, never perturbs: results stay byte-identical.
+    obs_live_addr: str | None = None
+    obs_source: str | None = None
     # per-tick invariant checking (repro.cluster.invariants): violations are
     # recorded (never raised) and surface in metrics["invariant_violations"];
     # the checker only reads sim state, so decisions are unchanged
@@ -59,10 +65,22 @@ def _fleet_for(cfg: "ExperimentConfig"):
 
 
 def _make_obs(cfg: ExperimentConfig):
-    if not cfg.obs_path:
+    if not cfg.obs_path and not cfg.obs_live_addr:
         return None
-    from repro.obs import NDJSONSink, SimObserver
-    return SimObserver(sink=NDJSONSink(cfg.obs_path),
+    from repro.obs import NDJSONSink, SimObserver, TeeSink, TransportSink
+    from repro.obs.sink import telemetry_loop
+    sinks = []
+    if cfg.obs_path:
+        sinks.append(NDJSONSink(cfg.obs_path))
+    if cfg.obs_live_addr:
+        # tcp sinks share the process loop and batch frames per send —
+        # per-run thread churn and per-frame send round-trips both land
+        # inside the live overhead budget (benchmarks/live_overhead.py)
+        loop = (telemetry_loop()
+                if cfg.obs_live_addr.startswith("tcp://") else None)
+        sinks.append(TransportSink(cfg.obs_live_addr, loop=loop,
+                                   source=cfg.obs_source, flush_every=8))
+    return SimObserver(sink=sinks[0] if len(sinks) == 1 else TeeSink(*sinks),
                        frame_every=cfg.obs_frame_every)
 
 
@@ -198,6 +216,11 @@ def compare(name: str, cfg: ExperimentConfig) -> dict:
             cfg, obs_path=str(p.with_name(f"{p.stem}__base{suffix}")))
         atlas_cfg = dataclasses.replace(
             cfg, obs_path=str(p.with_name(f"{p.stem}__atlas{suffix}")))
+    if cfg.obs_live_addr:            # distinct wire sources per run too
+        src = cfg.obs_source or name
+        base_cfg = dataclasses.replace(base_cfg, obs_source=f"{src}__base")
+        atlas_cfg = dataclasses.replace(atlas_cfg,
+                                        obs_source=f"{src}__atlas")
     base_metrics, train_trace, base_sim = run_baseline(name, base_cfg)
     predictor = TaskPredictor(algo=cfg.algo, seed=cfg.seed,
                               min_samples=cfg.min_samples,

@@ -447,7 +447,8 @@ def _obs_path(obs_dir, cell: CellSpec) -> str:
 
 def run_sweep(spec: SweepSpec, *, executor: str = "process",
               workers: int | None = None, registry: str | None = None,
-              obs_dir: str | None = None, log=print) -> dict:
+              obs_dir: str | None = None, obs_live: str | None = None,
+              log=print) -> dict:
     """Execute the full matrix; returns the SWEEP result dict (see sweep_json).
 
     Two waves: (1) all base-scheduler cells plus any training-only runs ATLAS
@@ -460,7 +461,12 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
     ``registry=DIR`` ships model *versions* through a ModelRegistry instead of
     raw trace arrays (forest-family algos).  ``obs_dir=DIR`` streams per-cell
     telemetry frames there and stamps per-cell roll-ups under ``perf.obs`` —
-    cells/aggregates/rankings stay byte-identical either way."""
+    cells/aggregates/rankings stay byte-identical either way.
+    ``obs_live=ADDR`` additionally streams every cell's frames to a live
+    TelemetryCollector over the serving transport (source = cell id); use a
+    ``tcp://`` address with the process/spawn executors — ``inproc://``
+    channels don't cross process boundaries.  The live path only observes:
+    SWEEP output bytes are identical with it on or off."""
     t0 = time.perf_counter()
     cells = expand(spec)
     base_cells = [c for c in cells if atlas_base_name(c.scheduler) is None]
@@ -470,6 +476,9 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
         cfg = cell_config(spec, cell)
         if obs_dir is not None:
             cfg = dataclasses.replace(cfg, obs_path=_obs_path(obs_dir, cell))
+        if obs_live is not None:
+            cfg = dataclasses.replace(cfg, obs_live_addr=obs_live,
+                                      obs_source=cell.cell_id)
         return cfg
 
     # training runs needed: one per (base, env) over the ATLAS cells
@@ -494,7 +503,8 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
         f"({len(base_cells)} base + {len(atlas_cells)} atlas), "
         f"{len(train_cells)} extra training runs, executor={executor}"
         + (f", registry={registry}" if registry else "")
-        + (f", obs={obs_dir}" if obs_dir else ""))
+        + (f", obs={obs_dir}" if obs_dir else "")
+        + (f", obs_live={obs_live}" if obs_live else ""))
 
     results: dict[str, dict] = {}
     train_data: dict[tuple, object] = {}
@@ -759,6 +769,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="stream per-cell telemetry frames to <out>/obs/ and "
                          "stamp deterministic roll-ups under perf.obs "
                          "(simulation results unchanged)")
+    ap.add_argument("--obs-live", default=None, metavar="ADDR",
+                    help="also stream every cell's frames to a live "
+                         "TelemetryCollector at this transport address "
+                         "(tcp://host:port — see python -m repro.obs.live); "
+                         "simulation results unchanged")
     ap.add_argument("--out", default="experiments",
                     help="directory for SWEEP.json + SWEEP.md")
     ap.add_argument("--list-scenarios", action="store_true")
@@ -789,7 +804,8 @@ def main(argv=None) -> int:
         return 2
     obs_dir = str(pathlib.Path(args.out) / "obs") if args.obs else None
     result = run_sweep(spec, executor=args.executor, workers=args.workers,
-                       registry=args.registry, obs_dir=obs_dir)
+                       registry=args.registry, obs_dir=obs_dir,
+                       obs_live=args.obs_live)
     jp, mp = write_outputs(result, args.out)
     sys.stdout.write(sweep_markdown(result))
     print(f"[fleet] wrote {jp} and {mp}"

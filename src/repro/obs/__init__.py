@@ -2,20 +2,37 @@
 
 A numpy-backed columnar metrics core (``metrics``), streaming per-tick frame
 sinks (``sink``), instrumentation observers for the simulator / broker /
-drift loop (``instrument``), and a self-contained HTML ops dashboard
-(``dashboard``, also ``python -m repro.obs.dashboard``).
+drift loop (``instrument``), a shared chart core (``render``), a
+self-contained HTML ops dashboard (``dashboard``, also
+``python -m repro.obs.dashboard``), and the live wire consumer: a
+``TelemetryCollector`` folding multi-cell telemetry into rolling aggregates
+plus an HTTP ``/snapshot`` / ``/delta`` server with self-refreshing views
+(``collector`` / ``live``, also ``python -m repro.obs.live``).
 
-See docs/OBSERVABILITY.md for the metric catalog, sink protocol and the
-overhead budget that keeps this layer always-on.
+See docs/OBSERVABILITY.md for the metric catalog, sink protocol, live-mode
+topology and the overhead budget that keeps this layer always-on.
 """
 
+from repro.obs.collector import TelemetryCollector
 from repro.obs.instrument import BrokerObserver, SimObserver
 from repro.obs.metrics import MetricsRegistry, percentile_from_hist
+from repro.obs.render import render_html
 from repro.obs.sink import (MemorySink, NDJSONSink, Sink, TeeSink,
                             TransportSink, read_ndjson)
+
+
+def __getattr__(name):
+    # lazy: importing repro.obs.live eagerly here makes
+    # ``python -m repro.obs.live`` warn about double execution (runpy)
+    if name == "LiveServer":
+        from repro.obs.live import LiveServer
+        return LiveServer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "BrokerObserver", "SimObserver", "MetricsRegistry",
     "percentile_from_hist", "MemorySink", "NDJSONSink", "Sink", "TeeSink",
-    "TransportSink", "read_ndjson",
+    "TransportSink", "read_ndjson", "TelemetryCollector", "LiveServer",
+    "render_html",
 ]

@@ -188,6 +188,38 @@ class MetricsRegistry:
         col = c[:, handle]
         return np.diff(col, prepend=col[:1]) if col.size else col
 
+    # ------------------------------------------------------- window views
+    # Rolling read-side views over the ring for live consumers (the
+    # TelemetryCollector): pure functions of ticked state, no mutation.
+
+    def window(self, n: int | None = None):
+        """Last-``n`` ring rows (times, counter rows, gauge rows), oldest
+        first; the whole retained window when ``n`` is None."""
+        t, c, g = self.ring()
+        if n is not None and t.size > n:
+            t, c, g = t[-n:], c[-n:], g[-n:]
+        return t, c, g
+
+    def counter_rate(self, handle: int, n: int | None = None) -> float:
+        """Mean increment of one counter per unit of ring time over the
+        last ``n`` ticks (0.0 with fewer than two ticks or zero span)."""
+        t, c, _ = self.window(n)
+        if t.size < 2:
+            return 0.0
+        span = float(t[-1] - t[0])
+        if span <= 0.0:
+            return 0.0
+        return float(c[-1, handle] - c[0, handle]) / span
+
+    def gauge_window(self, handle: int, n: int | None = None) -> dict:
+        """min/mean/max/last of one gauge over the last ``n`` ring ticks."""
+        _, _, g = self.window(n)
+        col = g[:, handle]
+        if col.size == 0:
+            return {"min": 0.0, "mean": 0.0, "max": 0.0, "last": 0.0}
+        return {"min": float(col.min()), "mean": float(col.mean()),
+                "max": float(col.max()), "last": float(col[-1])}
+
     # ------------------------------------------------------------ export
     def names(self, kind: str) -> tuple[str, ...]:
         return tuple({COUNTER: self._counter_names, GAUGE: self._gauge_names,

@@ -11,6 +11,34 @@ from __future__ import annotations
 
 import json
 import pathlib
+import threading
+import time
+
+# process-wide event loop shared by TransportSinks (see telemetry_loop())
+_shared_loop = None
+_shared_loop_lock = threading.Lock()
+
+
+def telemetry_loop():
+    """The process-wide daemon event loop for ``tcp://`` TransportSinks.
+
+    Spawning a loop thread per sink is measurable against a short fleet
+    cell (thread + selector setup and teardown land inside the telemetry
+    overhead budget), so producers that open one sink per run — the fleet's
+    ``--obs-live`` path, ``bench --obs-live`` — share one lazily-started
+    loop per process instead.  Sinks given a loop never own it, so
+    ``TransportSink.close()`` leaves this one running for the next run.
+    Not for ``inproc://`` addresses: inproc channels are loop-local, pass
+    the broker's own loop for those."""
+    global _shared_loop
+    import asyncio
+    with _shared_loop_lock:
+        if _shared_loop is None or _shared_loop.is_closed():
+            loop = asyncio.new_event_loop()
+            threading.Thread(target=loop.run_forever, daemon=True,
+                             name="telemetry-loop").start()
+            _shared_loop = loop
+        return _shared_loop
 
 
 class Sink:
@@ -111,39 +139,115 @@ class TransportSink(Sink):
     buffer (inproc: bounded channel; tcp: kernel socket buffer).  Pass the
     broker's own ``loop`` for ``inproc://`` addresses (inproc channels are
     loop-local); tcp addresses may instead let the sink run a private loop
-    thread."""
+    thread, or share the process-wide :func:`telemetry_loop`.
 
-    def __init__(self, address: str, loop=None, **connect_kw):
+    ``source`` names this producer on the wire: the message then carries
+    ``source`` plus a 1-based per-sink sequence ``n``, which the collector
+    side uses to spot gaps and reconnects across cells.  Without a source
+    the message is the bare two-key form earlier PRs shipped.
+
+    Like :class:`NDJSONSink`, frames can batch: with ``flush_every > 1``
+    emit buffers and every flush ships one ``{"op": "telemetry", "frames":
+    [{"frame": …, "n": …}, …]}`` message (a cross-thread send round-trip
+    per *batch* instead of per frame — the wire's version of the overhead
+    budget).  ``flush_interval_s`` bounds liveness: a flush also triggers
+    when that much wall time passed since the last one, so a slow real-time
+    producer still reaches the live dashboard promptly.  Per-frame ``n`` is
+    assigned at emit time, so gap/reconnect accounting is batch-blind."""
+
+    def __init__(self, address: str, loop=None, source: str | None = None,
+                 flush_every: int = 1, flush_interval_s: float = 0.25,
+                 **connect_kw):
         import asyncio
-        import threading
 
         from repro.online.transport import SyncComm
         self.address = address
+        self.source = source
+        self.flush_every = max(int(flush_every), 1)
+        self.flush_interval_s = flush_interval_s
         self._own_loop = loop is None
+        self._thread = None
         if self._own_loop:
             loop = asyncio.new_event_loop()
-            t = threading.Thread(target=loop.run_forever, daemon=True,
-                                 name="transport-sink")
-            t.start()
+            self._thread = threading.Thread(
+                target=loop.run_forever, daemon=True, name="transport-sink")
+            self._thread.start()
         self._loop = loop
         self._comm = SyncComm.connect(address, loop, **connect_kw)
         self.n_frames = 0
+        self._buf: list[tuple[dict, int]] = []
+        self._last_flush = time.monotonic()
 
     def emit(self, frame: dict):
-        self._comm.send({"op": "telemetry", "frame": frame})
-        self.n_frames += 1
+        if self._comm is None:
+            raise RuntimeError(
+                f"TransportSink({self.address!r}) is closed")
+        n = self.n_frames + 1
+        self._buf.append((frame, n))
+        self.n_frames = n
+        if (len(self._buf) >= self.flush_every
+                or time.monotonic() - self._last_flush
+                >= self.flush_interval_s):
+            self._flush()
+
+    def _flush(self):
+        batch, self._buf = self._buf, []
+        if len(batch) == 1:
+            frame, n = batch[0]
+            msg = {"op": "telemetry", "frame": frame}
+            if self.source is not None:
+                msg["source"] = self.source
+                msg["n"] = n
+        else:
+            msg = {"op": "telemetry",
+                   "frames": [{"frame": f, "n": n} for f, n in batch]}
+            if self.source is not None:
+                msg["source"] = self.source
+        self._comm.send(msg)
+        self._last_flush = time.monotonic()
 
     def close(self):
         if self._comm is not None:
+            if self._buf:
+                self._flush()
             self._comm.close()
             self._comm = None
             if self._own_loop:
+                # stop AND join the private loop thread, then close the
+                # loop: a daemon thread left spinning here outlives the
+                # sink and leaks an fd + selector per closed sink
                 self._loop.call_soon_threadsafe(self._loop.stop)
+                if self._thread is not None:
+                    self._thread.join(timeout=10.0)
+                    self._thread = None
+                if not self._loop.is_running():
+                    self._loop.close()
 
 
-def read_ndjson(path) -> list[dict]:
-    """Load a frame stream back (skips blank lines)."""
+def read_ndjson(path, *, return_partial: bool = False):
+    """Load a frame stream back (skips blank lines).
+
+    A truncated *trailing* line is tolerated: ``NDJSONSink`` batches its
+    flushes, so a tail-follow reader (the live view, ``dashboard.py`` mid-
+    run) can catch the file between ``write`` and the newline landing.
+    Complete frames are returned and the partial tail is counted; corruption
+    anywhere *else* in the file still raises.  With ``return_partial=True``
+    returns ``(frames, n_partial)`` where ``n_partial`` is 0 or 1."""
     p = pathlib.Path(path)
     if not p.exists():
-        return []
-    return [json.loads(line) for line in p.read_text().splitlines() if line]
+        return ([], 0) if return_partial else []
+    lines = p.read_text().splitlines()
+    last = len(lines) - 1
+    frames: list[dict] = []
+    n_partial = 0
+    for i, line in enumerate(lines):
+        if not line:
+            continue
+        try:
+            frames.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == last:
+                n_partial = 1
+            else:
+                raise
+    return (frames, n_partial) if return_partial else frames

@@ -533,7 +533,7 @@ def run_bench(*, rows: int = 6000, clients: int = 12, workload: str = "smoke",
               scenario: str = "bursty_tt", impl: str = "numpy",
               rate: float = 0.0, seed: int = 0, fleet_size: int = 0,
               policy: str = "barrier", depth: int = 256,
-              max_delay: float = 0.002, obs_dir=None,
+              max_delay: float = 0.002, obs_dir=None, obs_live=None,
               open_loop: bool = True, open_rate: float = 0.0,
               open_backends: tuple = ("inproc", "tcp"),
               slo_ms: float = 25.0) -> dict:
@@ -541,11 +541,23 @@ def run_bench(*, rows: int = 6000, clients: int = 12, workload: str = "smoke",
                                        seed=seed, min_rows=rows,
                                        fleet_size=fleet_size)
     obs = None
-    if obs_dir is not None:
-        from repro.obs import BrokerObserver, NDJSONSink
-        d = pathlib.Path(obs_dir)
-        d.mkdir(parents=True, exist_ok=True)
-        obs = BrokerObserver(sink=NDJSONSink(d / f"bench_n{fleet_size}.ndjson"))
+    if obs_dir is not None or obs_live is not None:
+        from repro.obs import (BrokerObserver, NDJSONSink, TeeSink,
+                               TransportSink)
+        sinks = []
+        if obs_dir is not None:
+            d = pathlib.Path(obs_dir)
+            d.mkdir(parents=True, exist_ok=True)
+            sinks.append(NDJSONSink(d / f"bench_n{fleet_size}.ndjson"))
+        if obs_live is not None:
+            from repro.obs.sink import telemetry_loop
+            loop = (telemetry_loop()
+                    if obs_live.startswith("tcp://") else None)
+            sinks.append(TransportSink(obs_live, loop=loop,
+                                       source=f"bench_n{fleet_size}",
+                                       flush_every=8))
+        obs = BrokerObserver(
+            sink=sinks[0] if len(sinks) == 1 else TeeSink(*sinks))
     scalar = run_scalar(predictor, requests)
     broker = run_broker(predictor, requests, clients=clients, impl=impl,
                         rate=rate, policy=policy, depth=depth,
@@ -641,6 +653,10 @@ def main(argv=None) -> int:
     ap.add_argument("--obs", action="store_true",
                     help="attach a BrokerObserver: per-flush NDJSON frames "
                          "under <out>/obs/ and an obs block in BENCH_<pr>")
+    ap.add_argument("--obs-live", default=None, metavar="ADDR",
+                    help="also stream broker flush frames to a live "
+                         "TelemetryCollector at this transport address "
+                         "(see python -m repro.obs.live)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run (fewer rows/clients)")
     args = ap.parse_args(argv)
@@ -654,7 +670,7 @@ def main(argv=None) -> int:
         fleet_sizes, rows=rows, clients=clients, workload=args.workload,
         scenario=args.scenario, impl=args.impl, rate=args.rate,
         seed=args.seed, policy=args.policy, depth=args.depth,
-        max_delay=args.max_delay, obs_dir=obs_dir,
+        max_delay=args.max_delay, obs_dir=obs_dir, obs_live=args.obs_live,
         open_loop=not args.no_open_loop, open_rate=args.open_rate,
         open_backends=tuple(args.open_backends.split(",")),
         slo_ms=args.slo_ms)

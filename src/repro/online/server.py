@@ -51,7 +51,16 @@ Wire protocol (one msg dict per frame; ndarray-safe over tcp://):
                                         (inproc only: live model objects)
   {"op": "register", "n": 4}         (barrier membership, no reply)
   {"op": "done"}                     (client will not submit again)
-  {"op": "telemetry", "frame": {...}} (repro.obs frame -> telemetry_sink)
+  {"op": "telemetry", "frame": {...},
+   "source": "cell", "n": 7}         (repro.obs frame -> collector +
+                                      telemetry_sink; source/n optional:
+                                      per-producer id + 1-based emit counter
+                                      for gap/reconnect accounting)
+  {"op": "telemetry", "source": "cell",
+   "frames": [{"frame": {...}, "n": 7}, ...]}
+                                     (batched form: TransportSink with
+                                      flush_every > 1 ships one message
+                                      per flush, per-frame n preserved)
   {"op": "stats"}                    -> deterministic counter dict
   {"op": "ping"}                     -> {"op": "pong"}
 
@@ -118,6 +127,9 @@ class AsyncBroker:
         # optional collaborators
         self.obs = None                  # repro.obs.BrokerObserver
         self.telemetry_sink = None       # repro.obs Sink for telemetry frames
+        self.collector = None            # repro.obs.TelemetryCollector
+        # per-source telemetry wire accounting (reporting only)
+        self._telemetry_sources: dict[str, dict] = {}
         # loop state (loop-confined once started)
         self.loop: asyncio.AbstractEventLoop | None = None
         self._thread: threading.Thread | None = None
@@ -239,9 +251,7 @@ class AsyncBroker:
                 elif op == "register":
                     self._add_clients(int(msg.get("n", 1)))
                 elif op == "telemetry":
-                    self.n_telemetry_frames += 1
-                    if self.telemetry_sink is not None:
-                        self.telemetry_sink.emit(msg["frame"])
+                    self._route_telemetry(msg)
                 elif op == "stats":
                     await comm.send(self.stats())
                 elif op == "ping":
@@ -359,6 +369,54 @@ class AsyncBroker:
             return
         task = asyncio.ensure_future(req.comm.send(msg))
         task.add_done_callback(_swallow_closed)
+
+    # ------------------------------------------------------------ telemetry
+    def _route_telemetry(self, msg: dict):
+        """Fan telemetry frames to the registered consumers.
+
+        One message carries a single ``frame`` or a batched ``frames`` list
+        (each entry ``{"frame": …, "n": …}`` — ``TransportSink`` batches
+        like ``NDJSONSink`` does).  Runs on the loop thread inside the
+        client's handler coroutine, so a slow ``collector.ingest`` parks
+        exactly that producer's channel — backpressure reaches the emitting
+        ``TransportSink`` through the transport's bounded buffers instead of
+        growing a queue here.  The time spent is accounted per source
+        (``ingest_s``) so a wedged collector is visible in
+        ``telemetry_stats()``."""
+        entries = msg.get("frames")
+        if entries is None:
+            entries = ({"frame": msg["frame"], "n": msg.get("n")},)
+        source = msg.get("source", "default")
+        st = self._telemetry_sources.get(source)
+        if st is None:
+            st = self._telemetry_sources[source] = {
+                "frames": 0, "last_n": 0, "gaps": 0, "reconnects": 0,
+                "ingest_s": 0.0}
+        for entry in entries:
+            self.n_telemetry_frames += 1
+            st["frames"] += 1
+            n = entry.get("n")
+            if n is not None:
+                if n <= st["last_n"]:
+                    st["reconnects"] += 1
+                elif n > st["last_n"] + 1:
+                    st["gaps"] += n - st["last_n"] - 1
+                st["last_n"] = n
+            if self.collector is not None:
+                t0 = time.perf_counter()
+                self.collector.ingest(entry["frame"], source=source, n=n)
+                st["ingest_s"] += time.perf_counter() - t0
+            if self.telemetry_sink is not None:
+                self.telemetry_sink.emit(entry["frame"])
+
+    def telemetry_stats(self) -> dict:
+        """Per-source telemetry wire accounting.  Reporting only — values
+        depend on arrival order and wall clock, so this stays out of the
+        deterministic ``stats()`` dict."""
+        return {"frames": self.n_telemetry_frames,
+                "sources": {k: {**v, "ingest_s": round(v["ingest_s"], 6)}
+                            for k, v in
+                            sorted(self._telemetry_sources.items())}}
 
     # ------------------------------------------------------------ accounting
     def stats(self) -> dict:

@@ -1,0 +1,399 @@
+"""Live telemetry wire tests: TelemetryCollector fold/delta semantics, the
+SimObserver → TransportSink → AsyncBroker → TelemetryCollector path over
+both inproc:// and tcp://, slow-collector backpressure, mid-stream
+disconnect/reconnect, TransportSink lifecycle, read_ndjson partial-tail
+tolerance, and the HTTP /snapshot + /delta + /view endpoints."""
+
+import json
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.cluster.chaos import ChaosConfig
+from repro.cluster.experiment import ExperimentConfig, run_scheduler
+from repro.cluster.workload import WorkloadConfig
+from repro.obs import (LiveServer, SimObserver, TelemetryCollector,
+                       TransportSink, read_ndjson)
+from repro.online.server import AsyncBroker
+
+
+def _sim_frame(i, t, occ=0.5, fails=(0, 0, 0, 0)):
+    return {"type": "frame", "i": i, "t": t, "occ": occ, "running": 2,
+            "pending": 1, "penalty_box": 0, "running_jobs": 1, "alive": 4,
+            "hb_stale_max": 0.5, "node_occ": [occ] * 4,
+            "node_fail": list(fails)}
+
+
+def _wait(pred, timeout=10.0):
+    deadline = time.time() + timeout
+    while not pred():
+        if time.time() > deadline:
+            raise AssertionError("timed out waiting for condition")
+        time.sleep(0.01)
+
+
+# ---------------------------------------------------------------------------
+# Collector fold + delta semantics
+# ---------------------------------------------------------------------------
+
+def test_collector_folds_sim_and_broker_streams():
+    c = TelemetryCollector()
+    c.ingest({"type": "meta", "t": 0.0, "frame_every": 60.0, "n_nodes": 4,
+              "scheduler": "fifo"}, source="cell")
+    for i in range(4):
+        c.ingest(_sim_frame(i, 60.0 * (i + 1), occ=0.4 + 0.1 * i,
+                            fails=(1, 0, 0, 0)), source="cell")
+    c.ingest({"type": "flush", "i": 0, "rows": 48, "requests": 6,
+              "dispatches": 2, "latency_ms": 1.5}, source="cell")
+    c.ingest({"type": "final", "t": 300.0, "summary": {}}, source="cell")
+    agg = c.aggregates()["cell"]
+    assert agg["frames"] == 7 and agg["done"]    # meta+4 sim+flush+final
+    assert agg["meta"]["scheduler"] == "fifo"
+    sim = agg["sim"]
+    assert sim["frames"] == 4 and sim["failures"] == 4
+    assert sim["occupancy"]["last"] == pytest.approx(0.7)
+    assert sim["occupancy"]["min"] == pytest.approx(0.4)
+    # windowed failure rate: 4 failures over ring span 60..240 = 3/180
+    assert sim["failure_rate_w"] == pytest.approx(3 / 180, abs=1e-6)
+    broker = agg["broker"]
+    assert broker["flushes"] == 1 and broker["rows"] == 48
+    assert broker["flush_rows_p50"] == 64.0       # upper-edge bucket
+    assert broker["queue_depth_p50"] == 8.0
+
+
+def test_collector_delta_is_gapless_and_chains():
+    c = TelemetryCollector()
+    for i in range(20):
+        c.ingest({"type": "meta"}, source=f"s{i % 3}")
+    seen, since = [], 0
+    while True:
+        r = c.delta(since)
+        assert "resync" not in r
+        if not r["frames"]:
+            break
+        seen.extend(e["seq"] for e in r["frames"])
+        since = r["frames"][-1]["seq"]
+    assert seen == list(range(1, 21))
+    assert c.delta(20) == {"seq": 20, "frames": []}
+
+
+def test_collector_delta_resync_after_eviction():
+    c = TelemetryCollector(delta_capacity=4)
+    for _ in range(10):
+        c.ingest({"type": "meta"}, source="s")
+    r = c.delta(2)                      # oldest retained seq is 7
+    assert r["resync"] is True and r["dropped"] == 4
+    assert [e["seq"] for e in r["frames"]] == [7, 8, 9, 10]
+    assert c.health()["delta_log_evicted"] == 6
+
+
+def test_collector_replay_reproduces_aggregates():
+    c = TelemetryCollector()
+    c.ingest({"type": "meta", "scheduler": "fifo"}, source="a", n=1)
+    for i in range(6):
+        c.ingest(_sim_frame(i, 60.0 * i, fails=(i % 2, 0, 0, 0)),
+                 source="a" if i % 2 else "b", n=i + 2)
+    replay = TelemetryCollector()
+    for e in c.delta(0)["frames"]:
+        replay.ingest(e["frame"], source=e["source"])
+    assert replay.aggregates() == c.aggregates()
+
+
+def test_collector_wire_gap_and_reconnect_accounting():
+    c = TelemetryCollector()
+    c.ingest({"type": "meta"}, source="s", n=1)
+    c.ingest({"type": "meta"}, source="s", n=2)
+    c.ingest({"type": "meta"}, source="s", n=6)      # 3,4,5 lost
+    c.ingest({"type": "meta"}, source="s", n=1)      # producer restarted
+    h = c.health()["sources"]["s"]
+    assert h["wire_gaps"] == 3
+    assert h["reconnects"] == 1
+    # wire accounting is health-side only: aggregates ignore n entirely
+    c2 = TelemetryCollector()
+    for _ in range(4):
+        c2.ingest({"type": "meta"}, source="s")
+    assert c2.aggregates() == c.aggregates()
+
+
+# ---------------------------------------------------------------------------
+# E2E wire path: SimObserver -> TransportSink -> AsyncBroker -> collector
+# ---------------------------------------------------------------------------
+
+class _Node:
+    def __init__(self):
+        self.spec = type("S", (), {"map_slots": 2, "reduce_slots": 2,
+                                   "name": "n"})()
+        self.running_maps = 1
+        self.running_reduces = 0
+        self.last_heartbeat = 0.0
+        self.failed_count = 0
+
+
+class _Sim:
+    def __init__(self):
+        self.nodes = [_Node()]
+        self.pending = ()
+        self.n_running_jobs = 0
+        self.heartbeat_interval = 600.0
+        self._known_alive = {0}
+        self.scheduler = type("Sch", (), {
+            "name": "fifo",
+            "frame_stats": lambda self: {"penalty_box": 0, "pred": None},
+        })()
+        self.now = 0.0
+
+
+def test_e2e_inproc_simobserver_to_collector():
+    with AsyncBroker() as srv:
+        coll = TelemetryCollector()
+        srv.collector = coll
+        addr = srv.serve()
+        # inproc channels are loop-local: the sink must use the broker loop
+        sink = TransportSink(addr, loop=srv.loop, source="cellA")
+        obs = SimObserver(sink=sink, frame_every=10.0,
+                          min_events_per_frame=1)
+        sim = _Sim()
+        obs.bind(sim)
+        for t in (1.0, 12.0, 23.0, 34.0, 45.0):
+            sim.now = t
+            obs.after_event(sim, 0)
+        obs.finish(sim)                  # final frame + closes the sink
+        n_sent = sink.n_frames
+        assert n_sent >= 3               # meta + frames + final
+        _wait(lambda: coll.seq >= n_sent)
+        agg = coll.aggregates()["cellA"]
+        assert agg["done"] and agg["sim"]["frames"] >= 1
+        assert agg["meta"]["scheduler"] == "fifo"
+        st = srv.telemetry_stats()["sources"]["cellA"]
+        assert st["frames"] == n_sent and st["gaps"] == 0
+
+
+def test_batched_wire_form_preserves_per_frame_accounting():
+    # flush_every > 1 ships {"frames": [{"frame",  "n"}, ...]} messages;
+    # the server must unbatch with per-frame seq/gap accounting intact
+    with AsyncBroker() as srv:
+        coll = TelemetryCollector()
+        srv.collector = coll
+        addr = srv.serve()
+        sink = TransportSink(addr, loop=srv.loop, source="cellB",
+                             flush_every=4)
+        for i in range(6):
+            sink.emit(_sim_frame(i, 10.0 * (i + 1)))
+        assert sink.n_frames == 6        # 4 sent + 2 still buffered
+        _wait(lambda: coll.seq >= 4)
+        sink.close()                     # flushes the 2-frame tail
+        _wait(lambda: coll.seq >= 6)
+        st = srv.telemetry_stats()["sources"]["cellB"]
+        assert st["frames"] == 6
+        assert st["gaps"] == 0 and st["reconnects"] == 0
+        assert st["last_n"] == 6
+        assert coll.aggregates()["cellB"]["sim"]["frames"] == 6
+
+
+def test_e2e_tcp_run_scheduler_obs_live_does_not_perturb():
+    cfg = ExperimentConfig(
+        workload=WorkloadConfig(n_single=10, n_chains=2, seed=5),
+        chaos=ChaosConfig(intensity=2.0, seed=6),
+        seed=3, min_samples=32, max_train=256, obs_frame_every=120.0)
+    plain, _, _ = run_scheduler("fifo", cfg)
+    with AsyncBroker() as srv:
+        coll = TelemetryCollector()
+        srv.collector = coll
+        addr = srv.serve("tcp://127.0.0.1:0")
+        import dataclasses
+        live_cfg = dataclasses.replace(cfg, obs_live_addr=addr,
+                                       obs_source="fifo/s3")
+        live, _, _ = run_scheduler("fifo", live_cfg)
+        n_emitted = live["obs"]["frames"] + 2      # + meta + final
+        _wait(lambda: coll.seq >= n_emitted)
+    stripped = {k: v for k, v in live.items() if k != "obs"}
+    assert stripped == plain, "live telemetry changed simulation results"
+    agg = coll.aggregates()["fifo/s3"]
+    assert agg["done"]
+    assert agg["sim"]["frames"] == live["obs"]["frames"]
+    assert srv.telemetry_stats()["sources"]["fifo/s3"]["gaps"] == 0
+
+
+def test_e2e_slow_collector_applies_backpressure_without_loss():
+    class _Slow(TelemetryCollector):
+        def ingest(self, frame, **kw):
+            time.sleep(0.002)
+            return super().ingest(frame, **kw)
+
+    with AsyncBroker() as srv:
+        coll = _Slow()
+        srv.collector = coll
+        # tiny channel: emit must block on the full channel, not drop
+        addr = srv.serve(capacity=2)
+        sink = TransportSink(addr, loop=srv.loop, source="s")
+        frames = [_sim_frame(i, 60.0 * i) for i in range(40)]
+        for f in frames:
+            sink.emit(f)
+        sink.close()
+        _wait(lambda: coll.seq >= 40)
+    assert coll.seq == 40
+    assert [e["frame"] for e in coll.delta(0)["frames"]] == frames
+    h = coll.health()["sources"]["s"]
+    assert h["wire_gaps"] == 0 and h["reconnects"] == 0
+
+
+def test_e2e_mid_stream_disconnect_reconnect():
+    with AsyncBroker() as srv:
+        coll = TelemetryCollector()
+        srv.collector = coll
+        addr = srv.serve("tcp://127.0.0.1:0")
+        first = TransportSink(addr, source="cell")
+        for i in range(5):
+            first.emit(_sim_frame(i, 60.0 * i))
+        first.close()                    # mid-stream disconnect
+        second = TransportSink(addr, source="cell")   # fresh counter
+        for i in range(3):
+            second.emit(_sim_frame(5 + i, 60.0 * (5 + i)))
+        second.close()
+        _wait(lambda: coll.seq >= 8)
+    assert coll.aggregates()["cell"]["sim"]["frames"] == 8
+    h = coll.health()["sources"]["cell"]
+    assert h["reconnects"] == 1 and h["last_n"] == 3
+    assert srv.telemetry_stats()["sources"]["cell"]["reconnects"] == 1
+
+
+# ---------------------------------------------------------------------------
+# TransportSink lifecycle (satellite: close joins its own loop thread)
+# ---------------------------------------------------------------------------
+
+def test_transport_sink_close_joins_private_loop_thread():
+    with AsyncBroker() as srv:
+        addr = srv.serve("tcp://127.0.0.1:0")
+        sink = TransportSink(addr, source="x")
+        thread = sink._thread
+        assert thread is not None and thread.is_alive()
+        sink.emit({"type": "meta"})
+        sink.close()
+        assert not thread.is_alive(), "private loop thread not joined"
+        assert sink._loop.is_closed()
+        sink.close()                     # idempotent
+
+
+def test_transport_sink_emit_after_close_raises_clearly():
+    with AsyncBroker() as srv:
+        addr = srv.serve("tcp://127.0.0.1:0")
+        sink = TransportSink(addr, source="x")
+        sink.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            sink.emit({"type": "meta"})
+
+
+def test_transport_sink_without_source_keeps_bare_wire_format():
+    """Back-compat: no source => the two-key message, no per-source row."""
+    with AsyncBroker() as srv:
+        coll = TelemetryCollector()
+        srv.collector = coll
+        addr = srv.serve()
+        sink = TransportSink(addr, loop=srv.loop)
+        sink.emit({"type": "meta"})
+        sink.close()
+        _wait(lambda: coll.seq >= 1)
+    assert coll.source_names() == ["default"]
+    assert srv.telemetry_stats()["sources"]["default"]["last_n"] == 0
+
+
+# ---------------------------------------------------------------------------
+# read_ndjson partial-tail tolerance (satellite)
+# ---------------------------------------------------------------------------
+
+def test_read_ndjson_tolerates_truncated_tail(tmp_path):
+    p = tmp_path / "frames.ndjson"
+    frames = [{"i": 0}, {"i": 1}, {"i": 2}]
+    lines = [json.dumps(f) for f in frames]
+    p.write_text("\n".join(lines) + '\n{"i": 3, "tru')   # racing a flush
+    assert read_ndjson(p) == frames
+    got, n_partial = read_ndjson(p, return_partial=True)
+    assert got == frames and n_partial == 1
+
+
+def test_read_ndjson_complete_file_has_no_partial(tmp_path):
+    p = tmp_path / "frames.ndjson"
+    p.write_text('{"i": 0}\n{"i": 1}\n')
+    got, n_partial = read_ndjson(p, return_partial=True)
+    assert got == [{"i": 0}, {"i": 1}] and n_partial == 0
+    assert read_ndjson(tmp_path / "missing.ndjson",
+                       return_partial=True) == ([], 0)
+
+
+def test_read_ndjson_mid_file_corruption_still_raises(tmp_path):
+    p = tmp_path / "frames.ndjson"
+    p.write_text('{"i": 0}\n{"i": 1, "tru\n{"i": 2}\n')
+    with pytest.raises(json.JSONDecodeError):
+        read_ndjson(p)
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoints
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def live_http():
+    c = TelemetryCollector()
+    c.ingest({"type": "meta", "t": 0.0, "frame_every": 60.0, "n_nodes": 4,
+              "scheduler": "fifo"}, source="cell", n=1)
+    for i in range(3):
+        c.ingest(_sim_frame(i, 60.0 * (i + 1)), source="cell", n=i + 2)
+    c.ingest({"type": "flush", "i": 0, "rows": 16, "requests": 4,
+              "dispatches": 1, "latency_ms": 0.9}, source="bench", n=1)
+    with LiveServer(c, refresh=1.0) as http:
+        yield c, http
+
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=10) as r:
+        return r.status, r.read().decode()
+
+
+def test_http_snapshot_and_delta(live_http):
+    c, http = live_http
+    status, body = _get(http.address + "/snapshot")
+    snap = json.loads(body)
+    assert status == 200 and snap["seq"] == c.seq
+    assert snap["aggregates"]["cell"]["sim"]["frames"] == 3
+    status, body = _get(http.address + "/delta?since=2")
+    delta = json.loads(body)
+    assert [e["seq"] for e in delta["frames"]] == [3, 4, 5]
+    # bad since is a 400, unknown path a 404
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _get(http.address + "/delta?since=nope")
+    assert e.value.code == 400
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _get(http.address + "/nope")
+    assert e.value.code == 404
+
+
+def test_http_views_render_incrementally(live_http):
+    c, http = live_http
+    _, index = _get(http.address + "/")
+    assert "cell" in index and "bench" in index
+    _, view = _get(http.address + "/view?source=cell")
+    assert 'http-equiv="refresh"' in view       # self-refreshing
+    assert "Fleet occupancy" in view
+    # new frames show up on the next render without any file reads
+    c.ingest(_sim_frame(3, 240.0, occ=0.9), source="cell", n=5)
+    _, view2 = _get(http.address + "/view?source=cell")
+    assert view2 != view
+    # broker-only sources render the flush cards
+    _, bview = _get(http.address + "/view?source=bench")
+    assert "Broker" in bview
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _get(http.address + "/view?source=ghost")
+    assert e.value.code == 404
+
+
+def test_static_dashboard_has_no_refresh(tmp_path):
+    """The split keeps the static artifact static: no auto-refresh meta."""
+    from repro.obs.dashboard import render_html
+    frames = [{"type": "meta", "t": 0.0, "frame_every": 60.0, "n_nodes": 4,
+               "scheduler": "fifo"}] + [_sim_frame(i, 60.0 * (i + 1))
+                                        for i in range(3)]
+    doc = render_html(frames)
+    assert 'http-equiv="refresh"' not in doc
+    assert "Fleet occupancy" in doc
