@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test lint sweep-smoke online-smoke bench-smoke obs-smoke serve-smoke \
-	search-smoke live-smoke
+	search-smoke live-smoke chaos-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -73,6 +73,17 @@ obs-smoke:
 # into experiments/BENCH_<pr>.json
 live-smoke:
 	PYTHONPATH=src $(PY) benchmarks/live_overhead.py
+
+# chaos smoke: the fault-injection gate — (1) the async smoke sweep under a
+# seeded FaultPlan (drops + delays + duplicates + one broker restart) emits
+# SWEEP.json byte-identical to the fault-free control with nonzero
+# retry/replay counters, (2) the armed-but-fault-free resilience machinery
+# costs <=10%, (3) an injected predictor outage completes every cell with
+# nonzero fallback counters (graceful degradation), (4) a --resume sweep
+# SIGKILLed mid-run resumes to byte-identical SWEEP.json; stamps chaos stats
+# into experiments/BENCH_<pr>.json
+chaos-smoke:
+	PYTHONPATH=src $(PY) benchmarks/chaos_smoke.py
 
 # adversarial-search smoke: a tiny deterministic hill-climb (8 evals, 20-node
 # fleet, invariants ON in every cell) gating (a) a valid resumable

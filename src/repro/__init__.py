@@ -24,4 +24,4 @@ __version__ = "1.0.0"
 
 # Stamped into SWEEP.json / ONLINE.json / BENCH_<n>.json so the perf
 # trajectory across PRs is readable from one artifact.  Bump per PR.
-PR_TAG = "PR9-live"
+PR_TAG = "PR10-faults"

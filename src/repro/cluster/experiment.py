@@ -75,11 +75,15 @@ def _make_obs(cfg: ExperimentConfig):
     if cfg.obs_live_addr:
         # tcp sinks share the process loop and batch frames per send —
         # per-run thread churn and per-frame send round-trips both land
-        # inside the live overhead budget (benchmarks/live_overhead.py)
+        # inside the live overhead budget (benchmarks/live_overhead.py).
+        # reconnect=True: a collector crash/restart mid-run must read as a
+        # telemetry gap (bounded buffer + backoff re-dial), never as a
+        # failed simulation
         loop = (telemetry_loop()
                 if cfg.obs_live_addr.startswith("tcp://") else None)
         sinks.append(TransportSink(cfg.obs_live_addr, loop=loop,
-                                   source=cfg.obs_source, flush_every=8))
+                                   source=cfg.obs_source, flush_every=8,
+                                   reconnect=True, max_buffer=4096))
     return SimObserver(sink=sinks[0] if len(sinks) == 1 else TeeSink(*sinks),
                        frame_every=cfg.obs_frame_every)
 

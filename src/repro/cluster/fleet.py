@@ -343,13 +343,23 @@ def _run_atlas_wave_brokered(wave2, registry_dir, workers=None,
     return out, perf
 
 
-def _run_atlas_wave_async(wave2, registry_dir, workers=None, obs_dir=None):
+def _run_atlas_wave_async(wave2, registry_dir, workers=None, obs_dir=None,
+                          fault_plan=None, fault_stats=None):
     """Run every ATLAS cell as a *transport client* of one serving
     ``AsyncBroker`` (policy="barrier"): the same lock-step rounds as
     ``--executor broker``, driven by an event loop over ``repro.online.
     transport`` comms instead of a condition variable.  Rounds are a pure
     function of each client's request sequence, so the SWEEP.json bytes —
     including ``perf.broker`` — match the threaded broker executor exactly.
+
+    ``fault_plan`` (``repro.online.faults.FaultPlan``) injects the plan's
+    seeded fault schedule into the serving path (reply drops/delays/
+    duplicates, abrupt closes, listener restarts); clients then run with the
+    plan's retry budget and the broker's request replay keeps retried
+    flushes idempotent — the SWEEP bytes still match a fault-free run.
+    ``fault_stats`` (a caller-owned dict) receives the retry/replay/fallback
+    counters; they are reported there and *only* there so the deterministic
+    ``perf.broker`` block stays byte-identical under chaos.
     Returns (records, perf)."""
     import concurrent.futures as cf
 
@@ -364,13 +374,25 @@ def _run_atlas_wave_async(wave2, registry_dir, workers=None, obs_dir=None):
             sink=NDJSONSink(pathlib.Path(obs_dir) / "broker.ndjson"))
         server.obs = broker_obs
     server.start()
-    address = server.serve()
+    address = server.serve(fault_plan=fault_plan)
     server.add_clients(len(wave2))
     predictors = []
+    clients = []
+    client_kw = {}
+    if fault_plan is not None:
+        client_kw = dict(request_timeout_s=fault_plan.request_timeout_s,
+                         deadline_s=fault_plan.deadline_s,
+                         retry_seed=fault_plan.seed,
+                         # backoff scaled to the timeout: retry pacing should
+                         # track how fast this client detects a lost reply,
+                         # not a wall-clock constant sized for remote links
+                         backoff_base_s=fault_plan.request_timeout_s / 4,
+                         backoff_cap_s=fault_plan.request_timeout_s * 4)
 
     def run_one(args):
         cell, cfg, payload = args
-        client = BrokerClient(address, server.loop)
+        client = BrokerClient(address, server.loop, **client_kw)
+        clients.append(client)
         try:  # client.done() exactly once, or the round waits forever
             predictor = _load_predictor(
                 BrokerPredictor(broker=client, algo=cfg.algo, seed=cfg.seed,
@@ -399,6 +421,16 @@ def _run_atlas_wave_async(wave2, registry_dir, workers=None, obs_dir=None):
             "dispatch_reduction": round(
                 demand_calls / max(server.n_dispatches, 1), 2),
         }}
+        if fault_stats is not None:
+            fault_stats.update(server.fault_stats())
+            fault_stats["client_retries"] = sum(
+                c.n_retries for c in clients)
+            fault_stats["client_reconnects"] = sum(
+                c.n_reconnects for c in clients)
+            fault_stats["fallbacks"] = sum(
+                p.n_fallbacks for p in predictors)
+            fault_stats["fallback_rows"] = sum(
+                p.n_fallback_rows for p in predictors)
     finally:
         server.stop()
     if broker_obs is not None:
@@ -436,6 +468,117 @@ def _make_executor(kind: str, workers: int | None):
 
 
 # ---------------------------------------------------------------------------
+# Resumable sweeps: atomic per-cell ledger
+# ---------------------------------------------------------------------------
+
+class _CellLedger:
+    """Atomic per-cell result ledger — the resumable-sweep substrate.
+
+    Every finished cell lands as one JSON file written tmp-then-
+    ``os.replace``, so a SIGKILL anywhere leaves either a complete record or
+    none.  Training payloads ride along (registry versions inline, raw trace
+    datasets as an ``.npz`` sidecar written *before* its record, so a record
+    always implies a readable payload).  ``MANIFEST.json`` carries a
+    fingerprint over (spec, executor, registry, obs): a restart with the
+    same coordinates skips finished cells and reassembles byte-identical
+    ``SWEEP.json``; any mismatch wipes the ledger rather than mixing cells
+    from different sweeps.
+
+    The broker/async ATLAS wave is reused all-or-nothing: its
+    ``perf.broker`` counters are a function of the *entire* barrier-round
+    schedule, so partial reuse would stitch together a schedule no real run
+    produces.  That wave only resumes when every cell record plus the wave
+    perf record (``w2__PERF.json``) survived; otherwise the whole wave
+    reruns — which regenerates the exact same bytes anyway."""
+
+    def __init__(self, dir, spec: SweepSpec, executor: str,
+                 registry: str | None, obs: bool):
+        self.dir = pathlib.Path(dir)
+        self.fingerprint = cell_seed(
+            "ledger", json.dumps(spec.to_json(), sort_keys=True), executor,
+            registry or "", int(obs))
+        self.dir.mkdir(parents=True, exist_ok=True)
+        manifest = self.dir / "MANIFEST.json"
+        keep = False
+        try:
+            keep = (json.loads(manifest.read_text())
+                    .get("fingerprint") == self.fingerprint)
+        except (OSError, ValueError):
+            keep = False
+        if not keep:
+            for pat in ("*.json", "*.npz", "*.tmp"):
+                for p in self.dir.glob(pat):
+                    p.unlink()
+            self._write(manifest, {"fingerprint": self.fingerprint})
+
+    def _write(self, path: pathlib.Path, obj: dict):
+        tmp = path.with_name(path.name + ".tmp")
+        tmp.write_text(json.dumps(obj, sort_keys=True))
+        os.replace(tmp, path)
+
+    def _path(self, wave: int, cell: CellSpec) -> pathlib.Path:
+        return self.dir / (f"w{wave}__"
+                           + cell.cell_id.replace("/", "__") + ".json")
+
+    def load(self, wave: int, cell: CellSpec) -> dict | None:
+        try:
+            return json.loads(self._path(wave, cell).read_text())
+        except (OSError, ValueError):
+            return None
+
+    def store_wave1(self, cell, metrics, stats, payload, obs):
+        rec = {"metrics": metrics, "stats": stats, "obs": obs,
+               "payload": None}
+        if payload is not None:
+            if payload[0] == "registry":
+                rec["payload"] = list(payload)
+            else:
+                import numpy as np
+                (mx, my), (rx, ry) = payload[1]
+                npz = self._path(1, cell).with_suffix(".npz")
+                tmp = npz.with_name(npz.name + ".tmp")
+                with open(tmp, "wb") as f:
+                    np.savez(f, map_X=mx, map_y=my, red_X=rx, red_y=ry)
+                os.replace(tmp, npz)
+                rec["payload"] = ["datasets", npz.name]
+        self._write(self._path(1, cell), rec)
+
+    def payload_from(self, rec: dict):
+        pl = rec.get("payload")
+        if pl is None:
+            return None
+        if pl[0] == "registry":
+            return (pl[0], pl[1], pl[2])
+        import numpy as np
+        with np.load(self.dir / pl[1]) as z:
+            # .copy() detaches the arrays from the npz file handle
+            return ("datasets", ((z["map_X"].copy(), z["map_y"].copy()),
+                                 (z["red_X"].copy(), z["red_y"].copy())))
+
+    def store_wave2(self, cell, metrics, stats, obs):
+        self._write(self._path(2, cell),
+                    {"metrics": metrics, "stats": stats, "obs": obs})
+
+    def store_wave2_perf(self, perf: dict):
+        self._write(self.dir / "w2__PERF.json", perf)
+
+    def load_wave2_batch(self, cells):
+        """All-or-nothing reuse of the broker/async wave: (records, perf)
+        when every cell and the wave perf record are present, else None."""
+        try:
+            perf = json.loads((self.dir / "w2__PERF.json").read_text())
+        except (OSError, ValueError):
+            return None
+        out = []
+        for cell in cells:
+            rec = self.load(2, cell)
+            if rec is None:
+                return None
+            out.append((cell, rec["metrics"], rec["stats"], rec["obs"]))
+        return out, perf
+
+
+# ---------------------------------------------------------------------------
 # Sweep driver
 # ---------------------------------------------------------------------------
 
@@ -448,7 +591,8 @@ def _obs_path(obs_dir, cell: CellSpec) -> str:
 def run_sweep(spec: SweepSpec, *, executor: str = "process",
               workers: int | None = None, registry: str | None = None,
               obs_dir: str | None = None, obs_live: str | None = None,
-              log=print) -> dict:
+              resume_dir: str | None = None, fault_plan=None,
+              fault_stats: dict | None = None, log=print) -> dict:
     """Execute the full matrix; returns the SWEEP result dict (see sweep_json).
 
     Two waves: (1) all base-scheduler cells plus any training-only runs ATLAS
@@ -466,7 +610,18 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
     TelemetryCollector over the serving transport (source = cell id); use a
     ``tcp://`` address with the process/spawn executors — ``inproc://``
     channels don't cross process boundaries.  The live path only observes:
-    SWEEP output bytes are identical with it on or off."""
+    SWEEP output bytes are identical with it on or off.
+
+    ``resume_dir=DIR`` keeps an atomic per-cell ledger there
+    (:class:`_CellLedger`): a sweep killed mid-run and restarted with the
+    same coordinates skips finished cells and reassembles the identical
+    ``SWEEP.json`` bytes.  ``fault_plan`` (async executor only) injects a
+    seeded fault schedule into the serving path; ``fault_stats`` (a caller-
+    owned dict) receives the retry/replay/fallback counters, kept out of
+    the returned result so SWEEP bytes match a fault-free run."""
+    if fault_plan is not None and executor != "async":
+        raise ValueError("fault_plan requires executor='async' "
+                         "(the transport-served ATLAS wave)")
     t0 = time.perf_counter()
     cells = expand(spec)
     base_cells = [c for c in cells if atlas_base_name(c.scheduler) is None]
@@ -506,40 +661,89 @@ def run_sweep(spec: SweepSpec, *, executor: str = "process",
         + (f", obs={obs_dir}" if obs_dir else "")
         + (f", obs_live={obs_live}" if obs_live else ""))
 
+    ledger = None
+    if resume_dir is not None:
+        ledger = _CellLedger(resume_dir, spec, executor, registry,
+                             obs_dir is not None)
+
     results: dict[str, dict] = {}
     train_data: dict[tuple, object] = {}
     perf: dict = {}
     obs_cells: dict[str, dict] = {}
+
+    def _fold1(cell, metrics, stats, payload, obs):
+        if payload is not None:
+            train_data[(cell.scheduler,) + cell.env_key] = payload
+        results[cell.cell_id] = _cell_record(cell, metrics, stats)
+        if obs is not None:
+            obs_cells[cell.cell_id] = obs
+
+    def _fold2(cell, metrics, stats, obs):
+        results[cell.cell_id] = _cell_record(cell, metrics, stats)
+        if obs is not None:
+            obs_cells[cell.cell_id] = obs
+
+    wave1_todo, n1_resumed = [], 0
+    for args in wave1:
+        rec = ledger.load(1, args[0]) if ledger is not None else None
+        if rec is None:
+            wave1_todo.append(args)
+        else:
+            _fold1(args[0], rec["metrics"], rec["stats"],
+                   ledger.payload_from(rec), rec["obs"])
+            n1_resumed += 1
+
+    n2_resumed = 0
     with _make_executor(executor, workers) as pool:
         for cell, metrics, stats, payload, obs in pool.map(_run_base_cell,
-                                                           wave1):
-            if payload is not None:
-                train_data[(cell.scheduler,) + cell.env_key] = payload
-            results[cell.cell_id] = _cell_record(cell, metrics, stats)
-            if obs is not None:
-                obs_cells[cell.cell_id] = obs
-        log(f"[fleet] wave 1 done: {len(wave1)} runs, "
-            f"{len(train_data)} training payloads "
-            f"({time.perf_counter() - t0:.1f}s)")
+                                                           wave1_todo):
+            if ledger is not None:
+                ledger.store_wave1(cell, metrics, stats, payload, obs)
+            _fold1(cell, metrics, stats, payload, obs)
+        log(f"[fleet] wave 1 done: {len(wave1)} runs"
+            + (f" ({n1_resumed} resumed)" if n1_resumed else "")
+            + f", {len(train_data)} training payloads "
+              f"({time.perf_counter() - t0:.1f}s)")
 
         wave2 = [(c, _cfg(c),
                   train_data.get((atlas_base_name(c.scheduler),) + c.env_key))
                  for c in atlas_cells]
-        if executor == "broker":
-            wave2_out, perf = _run_atlas_wave_brokered(wave2, registry,
-                                                       workers, obs_dir)
-        elif executor == "async":
-            wave2_out, perf = _run_atlas_wave_async(wave2, registry,
-                                                    workers, obs_dir)
+        if executor in ("broker", "async"):
+            cached = (ledger.load_wave2_batch([w[0] for w in wave2])
+                      if ledger is not None else None)
+            if cached is not None:
+                wave2_out, perf = cached
+                n2_resumed = len(wave2_out)
+            elif executor == "broker":
+                wave2_out, perf = _run_atlas_wave_brokered(
+                    wave2, registry, workers, obs_dir)
+            else:
+                wave2_out, perf = _run_atlas_wave_async(
+                    wave2, registry, workers, obs_dir,
+                    fault_plan=fault_plan, fault_stats=fault_stats)
+            if ledger is not None and not n2_resumed:
+                for cell, metrics, stats, obs in wave2_out:
+                    ledger.store_wave2(cell, metrics, stats, obs)
+                ledger.store_wave2_perf(perf)
+            for cell, metrics, stats, obs in wave2_out:
+                _fold2(cell, metrics, stats, obs)
         else:
-            wave2_out = pool.map(_run_atlas_cell,
-                                 [w + (registry,) for w in wave2])
-        for cell, metrics, stats, obs in wave2_out:
-            results[cell.cell_id] = _cell_record(cell, metrics, stats)
-            if obs is not None:
-                obs_cells[cell.cell_id] = obs
-    log(f"[fleet] wave 2 done: {len(atlas_cells)} atlas runs "
-        f"({time.perf_counter() - t0:.1f}s total)")
+            wave2_todo = []
+            for w in wave2:
+                rec = ledger.load(2, w[0]) if ledger is not None else None
+                if rec is None:
+                    wave2_todo.append(w)
+                else:
+                    _fold2(w[0], rec["metrics"], rec["stats"], rec["obs"])
+                    n2_resumed += 1
+            for cell, metrics, stats, obs in pool.map(
+                    _run_atlas_cell, [w + (registry,) for w in wave2_todo]):
+                if ledger is not None:
+                    ledger.store_wave2(cell, metrics, stats, obs)
+                _fold2(cell, metrics, stats, obs)
+    log(f"[fleet] wave 2 done: {len(atlas_cells)} atlas runs"
+        + (f" ({n2_resumed} resumed)" if n2_resumed else "")
+        + f" ({time.perf_counter() - t0:.1f}s total)")
     if perf.get("broker"):
         b = perf["broker"]
         log(f"[fleet] broker: {b['demand_calls']} demand calls -> "
@@ -774,6 +978,17 @@ def build_parser() -> argparse.ArgumentParser:
                          "TelemetryCollector at this transport address "
                          "(tcp://host:port — see python -m repro.obs.live); "
                          "simulation results unchanged")
+    ap.add_argument("--resume", action="store_true",
+                    help="keep an atomic per-cell ledger in <out>/cells and "
+                         "skip cells it already holds: a sweep killed "
+                         "mid-run restarts to byte-identical SWEEP.json "
+                         "without re-running finished cells")
+    ap.add_argument("--faults", default=None, metavar="FILE",
+                    help="JSON FaultPlan (repro.online.faults) injected "
+                         "into the --executor async serving path; "
+                         "retry/replay/fallback counters land in "
+                         "<out>/FAULTS.json — SWEEP.json bytes are "
+                         "unaffected")
     ap.add_argument("--out", default="experiments",
                     help="directory for SWEEP.json + SWEEP.md")
     ap.add_argument("--list-scenarios", action="store_true")
@@ -803,10 +1018,31 @@ def main(argv=None) -> int:
         print(f"error: {e.args[0]}", file=sys.stderr)
         return 2
     obs_dir = str(pathlib.Path(args.out) / "obs") if args.obs else None
+    fault_plan = None
+    if args.faults:
+        from repro.online.faults import FaultPlan
+        if args.executor != "async":
+            print("error: --faults requires --executor async",
+                  file=sys.stderr)
+            return 2
+        fault_plan = FaultPlan.from_dict(
+            json.loads(pathlib.Path(args.faults).read_text()))
+    resume_dir = (str(pathlib.Path(args.out) / "cells")
+                  if args.resume else None)
+    fault_stats = {} if fault_plan is not None else None
     result = run_sweep(spec, executor=args.executor, workers=args.workers,
                        registry=args.registry, obs_dir=obs_dir,
-                       obs_live=args.obs_live)
+                       obs_live=args.obs_live, resume_dir=resume_dir,
+                       fault_plan=fault_plan, fault_stats=fault_stats)
     jp, mp = write_outputs(result, args.out)
+    if fault_stats is not None:
+        fp = pathlib.Path(args.out) / "FAULTS.json"
+        fp.write_text(json.dumps(fault_stats, indent=2, sort_keys=True)
+                      + "\n")
+        print(f"[fleet] fault stats in {fp}: "
+              f"{fault_stats.get('client_retries', 0)} retries, "
+              f"{fault_stats.get('fallbacks', 0)} fallbacks, "
+              f"{fault_stats['injected']['events']} injected events")
     sys.stdout.write(sweep_markdown(result))
     print(f"[fleet] wrote {jp} and {mp}"
           + (f" (+ telemetry frames in {obs_dir})" if obs_dir else ""))

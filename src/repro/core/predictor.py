@@ -158,7 +158,20 @@ class TaskPredictor:
 
     def load_snapshot(self, snap: dict):
         """Restore trained models from ``snapshot()`` output — bit-identical
-        scoring to the predictor that published it."""
+        scoring to the predictor that published it.
+
+        This is the broker crash-recovery path (``AsyncBroker.
+        from_registry``): a snapshot damaged by the very crash being
+        recovered from must fail loudly here, not as a scoring-time
+        ``KeyError`` three layers down."""
+        missing = [k for k in ("algo", "seed", "min_samples", "max_train",
+                               "fits", "models") if k not in snap]
+        if missing:
+            raise ValueError("malformed predictor snapshot: missing "
+                             + ", ".join(missing))
+        if snap["algo"] not in ALL_MODELS:
+            raise ValueError(f"snapshot algo {snap['algo']!r} unknown; "
+                             f"known: {', '.join(sorted(ALL_MODELS))}")
         self.algo = snap["algo"]
         self.seed = snap["seed"]
         self.min_samples = snap["min_samples"]

@@ -65,6 +65,9 @@ def _template(ring_capacity: int) -> tuple[MetricsRegistry, dict]:
         "hb_stale_max": m.gauge("live.hb_stale_max"),
         "drift_map_psi": m.gauge("live.drift.map.psi"),
         "drift_reduce_psi": m.gauge("live.drift.reduce.psi"),
+        "pred_fallbacks": m.gauge("live.pred_fallbacks"),
+        "pred_retries": m.gauge("live.pred_retries"),
+        "pred_reconnects": m.gauge("live.pred_reconnects"),
         "occ_hist": m.histogram("live.occupancy_dist", _OCC_EDGES),
         "flush_rows": m.histogram("live.flush_rows", FLUSH_ROW_EDGES),
         "flush_reqs": m.histogram("live.flush_requests", _FLUSH_REQ_EDGES),
@@ -174,6 +177,11 @@ class TelemetryCollector:
                 key = f"drift_{dkind}_psi"
                 if key in h and sig and sig.get("psi") is not None:
                     m.set(h[key], sig["psi"])
+            pred = frame.get("pred")
+            if pred and "fallbacks" in pred:
+                m.set(h["pred_fallbacks"], pred["fallbacks"])
+                m.set(h["pred_retries"], pred.get("retries", 0))
+                m.set(h["pred_reconnects"], pred.get("reconnects", 0))
             src.last_t = float(frame["t"])
             m.tick(src.last_t)
             src.frames.append(frame)
@@ -225,6 +233,12 @@ class TelemetryCollector:
                      if g[f"live.drift.{k}.psi"]}
             if drift:
                 agg["sim"]["drift_psi"] = drift
+            # degradation counters surface only when nonzero, so clean-run
+            # aggregates (and their replay comparisons) are unchanged
+            for name in ("fallbacks", "retries", "reconnects"):
+                v = g[f"live.pred_{name}"]
+                if v:
+                    agg["sim"][f"pred_{name}"] = int(v)
         if c["live.broker_flushes"]:
             agg["broker"] = {
                 "flushes": c["live.broker_flushes"],
@@ -295,9 +309,16 @@ class TelemetryCollector:
         Pollers chain ``since = reply["seq"]``.  If the bounded log has
         already evicted ``since + 1`` the reply carries ``resync: True``
         plus ``dropped`` (count lost to this poller) and everything still
-        retained — the client should re-pull ``/snapshot``."""
+        retained — the client should re-pull ``/snapshot``.  A ``since``
+        *ahead* of the current seq gets the same resync treatment: it means
+        the poller's chain came from a previous collector incarnation (the
+        consumer restarted underneath it), not from this counter — silently
+        returning "no news" would wedge the poller forever."""
         with self._lock:
-            if since >= self._seq:
+            if since > self._seq:
+                return {"seq": self._seq, "resync": True, "dropped": 0,
+                        "frames": list(self._log)}
+            if since == self._seq:
                 return {"seq": self._seq, "frames": []}
             oldest = self._log[0]["seq"] if self._log else self._seq + 1
             if since + 1 < oldest:

@@ -83,6 +83,9 @@ class SimObserver:
         handles["h_memo_rate"] = m.gauge("pred.memo_hit_rate")
         handles["h_memo_size"] = m.gauge("pred.memo_size")
         handles["h_memo_evict"] = m.gauge("pred.memo_evictions")
+        handles["h_fallbacks"] = m.gauge("pred.fallbacks")
+        handles["h_retries"] = m.gauge("pred.retries")
+        handles["h_reconnects"] = m.gauge("pred.reconnects")
         handles["_h_drift"] = {kind: (m.gauge(f"drift.{kind}.psi"),
                                       m.gauge(f"drift.{kind}.brier"))
                                for kind in ("map", "reduce")}
@@ -229,6 +232,10 @@ class SimObserver:
         if pred is not None and "memo_size" in pred:
             g[self.h_memo_size] = float(pred["memo_size"])
             g[self.h_memo_evict] = float(pred["memo_evictions"])
+        if pred is not None and "fallbacks" in pred:
+            g[self.h_fallbacks] = float(pred["fallbacks"])
+            g[self.h_retries] = float(pred.get("retries", 0))
+            g[self.h_reconnects] = float(pred.get("reconnects", 0))
         m.tick(t)
         self._n_frames += 1
         self._occ_sum += occ
@@ -302,6 +309,13 @@ class SimObserver:
             "memo_hit_rate": _round(g["pred.memo_hit_rate"]),
             "memo_evictions": int(g["pred.memo_evictions"]),
         }
+        # fault-tolerance counters appear only when something actually
+        # happened, so a clean run's summary (and the byte-stable SWEEP
+        # perf.obs block built from it) is unchanged
+        for name in ("fallbacks", "retries", "reconnects"):
+            v = g[f"pred.{name}"]
+            if v:
+                out[name] = int(v)
         if self._drift:
             out["drift_last"] = dict(sorted(self._drift.items()))
         return out

@@ -61,10 +61,17 @@ def _index_html(collector: TelemetryCollector, refresh: float) -> str:
     return render_page("repro live telemetry", body, refresh=refresh)
 
 
-def _make_handler(collector: TelemetryCollector, refresh: float):
+def _make_handler(collector: TelemetryCollector, refresh: float,
+                  handler_timeout: float = 10.0):
     class Handler(BaseHTTPRequestHandler):
         # ThreadingHTTPServer spawns a thread per request; the collector
         # lock is the only shared state these handlers touch.
+
+        # socketserver applies this to the connection in setup(): a client
+        # that connects and then stalls (half-open socket, wedged poller)
+        # hits socket.timeout instead of parking this handler thread —
+        # and its keep-alive connection — forever
+        timeout = handler_timeout
 
         def _send(self, code: int, body: bytes, ctype: str):
             self.send_response(code)
@@ -119,8 +126,10 @@ def _make_handler(collector: TelemetryCollector, refresh: float):
                                 "endpoints": ["/", "/snapshot",
                                               "/delta?since=N",
                                               "/view?source=NAME"]}, 404)
-            except BrokenPipeError:
-                pass     # client went away mid-write; nothing to clean up
+            except (BrokenPipeError, TimeoutError):
+                # client went away mid-write, or stalled past the socket
+                # timeout mid-response: drop the connection
+                self.close_connection = True
 
         def log_message(self, *a):     # quiet by default
             pass
@@ -137,10 +146,11 @@ class LiveServer:
 
     def __init__(self, collector: TelemetryCollector, *,
                  host: str = "127.0.0.1", port: int = 0,
-                 refresh: float = 2.0):
+                 refresh: float = 2.0, handler_timeout: float = 10.0):
         self.collector = collector
         self.httpd = ThreadingHTTPServer(
-            (host, port), _make_handler(collector, refresh))
+            (host, port), _make_handler(collector, refresh,
+                                        handler_timeout))
         self.address = f"http://{host}:{self.httpd.server_address[1]}"
         self._thread: threading.Thread | None = None
 

@@ -467,6 +467,16 @@ def _tiles(frames, final, meta) -> str:
     rate = summary.get("memo_hit_rate")
     if rate:
         items.append((_fmt(rate * 100, 1) + "%", "memo hit rate"))
+    # fault-tolerance tiles: nonzero only when the serving path actually
+    # degraded/retried (the summary omits the keys on clean runs, and the
+    # live path carries them in the last frame's pred block)
+    pred = last.get("pred") or {}
+    for key, label in (("fallbacks", "predictor fallbacks"),
+                       ("retries", "broker retries"),
+                       ("reconnects", "broker reconnects")):
+        v = summary.get(key, pred.get(key, 0))
+        if v:
+            items.append((_fmt(v, 0), label))
     tiles = "".join(f'<div class="tile"><div class="v">{html.escape(v)}'
                     f'</div><div class="k">{html.escape(k)}</div></div>'
                     for v, k in items)

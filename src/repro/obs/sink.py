@@ -153,10 +153,22 @@ class TransportSink(Sink):
     budget).  ``flush_interval_s`` bounds liveness: a flush also triggers
     when that much wall time passed since the last one, so a slow real-time
     producer still reaches the live dashboard promptly.  Per-frame ``n`` is
-    assigned at emit time, so gap/reconnect accounting is batch-blind."""
+    assigned at emit time, so gap/reconnect accounting is batch-blind.
+
+    Telemetry must never take the sim down with it: when the consumer dies
+    (broker crash, restart window) a failed send marks the comm down,
+    frames keep buffering up to ``max_buffer`` (oldest dropped beyond that
+    — ``n_dropped`` counts them, and the per-frame ``n`` lets the collector
+    see the gap), and each later flush retries the connection behind a
+    deterministic capped backoff (``faults.backoff_delay``).  On reconnect
+    the whole surviving buffer ships at once and the collector's wire
+    accounting records one reconnect.  Set ``reconnect=False`` to restore
+    the old raise-on-failure behavior."""
 
     def __init__(self, address: str, loop=None, source: str | None = None,
                  flush_every: int = 1, flush_interval_s: float = 0.25,
+                 reconnect: bool = True, max_buffer: int = 4096,
+                 backoff_base_s: float = 0.05, backoff_cap_s: float = 1.0,
                  **connect_kw):
         import asyncio
 
@@ -165,6 +177,10 @@ class TransportSink(Sink):
         self.source = source
         self.flush_every = max(int(flush_every), 1)
         self.flush_interval_s = flush_interval_s
+        self.reconnect = reconnect
+        self.max_buffer = max(int(max_buffer), 1)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_cap_s = float(backoff_cap_s)
         self._own_loop = loop is None
         self._thread = None
         if self._own_loop:
@@ -174,12 +190,19 @@ class TransportSink(Sink):
             self._thread.start()
         self._loop = loop
         self._comm = SyncComm.connect(address, loop, **connect_kw)
+        self._connect_kw = connect_kw
+        self._closed = False
         self.n_frames = 0
+        self.n_reconnects = 0
+        self.n_dropped = 0
+        self.n_send_errors = 0
+        self._retry_attempt = 0
+        self._retry_at = 0.0
         self._buf: list[tuple[dict, int]] = []
         self._last_flush = time.monotonic()
 
     def emit(self, frame: dict):
-        if self._comm is None:
+        if self._closed:
             raise RuntimeError(
                 f"TransportSink({self.address!r}) is closed")
         n = self.n_frames + 1
@@ -190,8 +213,7 @@ class TransportSink(Sink):
                 >= self.flush_interval_s):
             self._flush()
 
-    def _flush(self):
-        batch, self._buf = self._buf, []
+    def _build(self, batch) -> dict:
         if len(batch) == 1:
             frame, n = batch[0]
             msg = {"op": "telemetry", "frame": frame}
@@ -203,15 +225,79 @@ class TransportSink(Sink):
                    "frames": [{"frame": f, "n": n} for f, n in batch]}
             if self.source is not None:
                 msg["source"] = self.source
-        self._comm.send(msg)
+        return msg
+
+    def _flush(self):
+        if not self._buf:
+            return
+        if self._comm is None and not self._reconnect_now():
+            self._trim()
+            return
+        try:
+            self._comm.send(self._build(self._buf))
+        except Exception:
+            if not self.reconnect:
+                raise
+            self._mark_down()
+            self._trim()
+            return
+        self._buf = []
         self._last_flush = time.monotonic()
+        self._retry_attempt = 0
+
+    # ---------------------------------------------------------- reconnection
+    def _mark_down(self):
+        self.n_send_errors += 1
+        if self._comm is not None:
+            try:
+                self._comm.close(timeout=1.0)
+            except Exception:
+                pass
+            self._comm = None
+        self._arm_backoff()
+
+    def _arm_backoff(self):
+        from repro.online.faults import backoff_delay
+        self._retry_at = time.monotonic() + backoff_delay(
+            min(self._retry_attempt, 16), base=self.backoff_base_s,
+            cap=self.backoff_cap_s)
+        self._retry_attempt += 1
+
+    def _reconnect_now(self) -> bool:
+        """One reconnect attempt, rate-limited by the backoff clock (the
+        sim path must never spin on a dead consumer)."""
+        if time.monotonic() < self._retry_at:
+            return False
+        from repro.online.transport import SyncComm
+        try:
+            self._comm = SyncComm.connect(self.address, self._loop,
+                                          timeout=self.backoff_cap_s,
+                                          **self._connect_kw)
+        except Exception:
+            self._arm_backoff()
+            return False
+        self.n_reconnects += 1
+        return True
+
+    def _trim(self):
+        n_over = len(self._buf) - self.max_buffer
+        if n_over > 0:
+            del self._buf[:n_over]
+            self.n_dropped += n_over
 
     def close(self):
-        if self._comm is not None:
-            if self._buf:
-                self._flush()
-            self._comm.close()
-            self._comm = None
+        if not self._closed:
+            self._closed = True
+            if self._buf and (self._comm is not None
+                              or self._reconnect_now()):
+                try:
+                    self._comm.send(self._build(self._buf))
+                    self._buf = []
+                except Exception:
+                    pass                 # consumer already gone: best effort
+            if self._comm is not None:
+                self._comm.close()
+                self._comm = None
             if self._own_loop:
                 # stop AND join the private loop thread, then close the
                 # loop: a daemon thread left spinning here outlives the

@@ -288,11 +288,13 @@ def _arrival_schedule(n: int, rate_rps: float, kind: str, rng) -> np.ndarray:
 
 
 async def _open_loop_client(address, requests, idxs, sched, t0, outs, lats,
-                            slo_ms):
+                            slo_ms, reply_timeout_s: float = 120.0):
     """One open-loop client: fire requests at their scheduled offsets without
     waiting for replies; a reader task demuxes replies by id.  Latency is
     measured from the *scheduled* arrival, so a stalled broker keeps paying
     for the requests it should already have served (no coordinated omission).
+    The reader is bounded by ``reply_timeout_s``: a wedged broker turns into
+    a clean ``TimeoutError`` instead of hanging the bench (and CI) forever.
     """
     from repro.online.transport import connect
     comm = await connect(address)
@@ -322,7 +324,7 @@ async def _open_loop_client(address, requests, idxs, sched, t0, outs, lats,
                 msg["budget_ms"] = slo_ms
             pending[j] = (qi, t_sched)
             await comm.send(msg)
-        await rtask
+        await asyncio.wait_for(rtask, reply_timeout_s)
     finally:
         rtask.cancel()
         await comm.close()

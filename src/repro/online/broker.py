@@ -346,11 +346,26 @@ class BrokerPredictor(TaskPredictor):
     producing bit-identical decisions to the per-decision path."""
 
     def __init__(self, *, broker=None, impl: str = "numpy",
-                 max_prime_rows: int = 4096, memo_cap: int = 65536, **kw):
+                 max_prime_rows: int = 4096, memo_cap: int = 65536,
+                 fallback_probe_every: int = 64, **kw):
         super().__init__(**kw)
         self.broker = broker
         self.impl = impl
         self.max_prime_rows = max_prime_rows
+        # graceful degradation (paper behavior: when the failure predictor
+        # is unavailable, schedule anyway — never fail the task).  A broker
+        # that stays unreachable past the client's retry budget flips
+        # ``degraded``; degraded flushes answer p=1.0 for every row, which
+        # is exactly the untrained-model semantics: the ATLAS gate passes
+        # and the base scheduler's proposed placement goes through
+        # deterministically.  Every ``fallback_probe_every``-th degraded
+        # flush retries the broker for real (a logical cadence, no wall
+        # clock) and a success clears the degradation.
+        self.fallback_probe_every = int(fallback_probe_every)
+        self.degraded = False
+        self._probe_countdown = 0
+        self.n_fallbacks = 0
+        self.n_fallback_rows = 0
         # exact-feature memo bound: the memo clears per tick in fleet runs,
         # but a serving-mode predictor (no ticks — e.g. behind the
         # AsyncBroker on an open-loop stream) would otherwise grow it without
@@ -378,13 +393,16 @@ class BrokerPredictor(TaskPredictor):
 
     def frame_stats(self) -> dict:
         # field order matters: NDJSON frame bytes must match the obs layer's
-        # historical per-frame pred dict exactly
+        # historical per-frame pred dict exactly (new keys append at the end)
         return {"dispatches": self.n_dispatches, "rows": self.n_rows_scored,
                 "memo_hits": self.n_memo_hits,
                 "memo_misses": self.n_memo_misses,
                 "demand_rows": self.n_demand_rows,
                 "memo_size": len(self._memo),
-                "memo_evictions": self.n_memo_evictions}
+                "memo_evictions": self.n_memo_evictions,
+                "fallbacks": self.n_fallbacks,
+                "retries": getattr(self.broker, "n_retries", 0),
+                "reconnects": getattr(self.broker, "n_reconnects", 0)}
 
     # ------------------------------------------------------------ tick hooks
     def begin_tick(self, sim, extra_keys=()):
@@ -403,10 +421,37 @@ class BrokerPredictor(TaskPredictor):
     # ------------------------------------------------------------ flushing
     def _flush(self, groups) -> list:
         if self.broker is not None:
-            return self.broker.submit(groups)
+            return self._flush_brokered(groups)
         outs, n = score_groups(groups, impl=self.impl)
         self.n_dispatches += n
         self.n_rows_scored += sum(np.asarray(X).shape[0] for _, X in groups)
+        return outs
+
+    def _flush_brokered(self, groups) -> list:
+        from repro.online.faults import PredictorUnavailableError
+        if not self.degraded or self._probe_countdown <= 0:
+            try:
+                outs = self.broker.submit(groups)
+                self.degraded = False
+                return outs
+            except PredictorUnavailableError:
+                self.degraded = True
+                self._probe_countdown = self.fallback_probe_every
+        else:
+            self._probe_countdown -= 1
+        return self._fallback(groups)
+
+    def _fallback(self, groups) -> list:
+        """Degraded-mode answer: p=1.0 per row (schedule anyway).  Fallback
+        rows do land in the tick memo, but the memo clears every
+        ``begin_tick``, so stale optimism is bounded to one tick after the
+        broker comes back."""
+        self.n_fallbacks += 1
+        outs = []
+        for _, X in groups:
+            rows = np.asarray(X).shape[0]
+            self.n_fallback_rows += rows
+            outs.append(np.ones(rows, np.float32))
         return outs
 
     def _memoize(self, kind: str, X: np.ndarray, probs: np.ndarray,

@@ -72,31 +72,39 @@ floats — the policies only move *when* a batch closes.
 from __future__ import annotations
 
 import asyncio
+import concurrent.futures
 import itertools
+import os
 import threading
 import time
 
 import numpy as np
 
 from repro.online.broker import score_groups
+from repro.online.faults import (FaultInjector, PredictorUnavailableError,
+                                 backoff_delay)
 from repro.online.transport import (CommClosedError, SyncComm, connect,
                                     listen)
 
 _SERVE_SEQ = itertools.count()
+_CLIENT_SEQ = itertools.count()
 
 
 class _Req:
     """One admitted request: where to reply + its span of the next flush."""
 
-    __slots__ = ("comm", "req_id", "groups", "rows", "vadmit", "deadline")
+    __slots__ = ("comm", "req_id", "groups", "rows", "vadmit", "deadline",
+                 "client")
 
-    def __init__(self, comm, req_id, groups, rows, vadmit, deadline):
+    def __init__(self, comm, req_id, groups, rows, vadmit, deadline,
+                 client=None):
         self.comm = comm
         self.req_id = req_id
         self.groups = groups
         self.rows = rows
         self.vadmit = vadmit
         self.deadline = deadline
+        self.client = client
 
 
 class AsyncBroker:
@@ -130,6 +138,16 @@ class AsyncBroker:
         self.collector = None            # repro.obs.TelemetryCollector
         # per-source telemetry wire accounting (reporting only)
         self._telemetry_sources: dict[str, dict] = {}
+        # idempotent-replay state: one outstanding request per client, so a
+        # single slot per client id holds either the in-flight _Req (a
+        # retransmit just re-aims its reply comm) or the finished reply (a
+        # retransmit gets it resent verbatim — never rescored, never
+        # recounted).  This is what makes client retries invisible to the
+        # deterministic counters and keeps SWEEP.json byte parity under
+        # fault injection.
+        self._replay: dict[str, tuple] = {}
+        self._done_clients: set[str] = set()
+        self._injectors: list[FaultInjector] = []
         # loop state (loop-confined once started)
         self.loop: asyncio.AbstractEventLoop | None = None
         self._thread: threading.Thread | None = None
@@ -155,6 +173,8 @@ class AsyncBroker:
         self.n_deadline_flushes = 0
         self.n_backpressure_waits = 0
         self.n_telemetry_frames = 0
+        self.n_replays = 0               # cached replies resent to retries
+        self.n_dup_requests = 0          # retransmits of in-flight requests
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "AsyncBroker":
@@ -184,16 +204,47 @@ class AsyncBroker:
         ready.wait()
         return self
 
-    def serve(self, address: str = "", **kw) -> str:
+    def serve(self, address: str = "", *, fault_plan=None, **kw) -> str:
         """Bind a listener; returns the bound address (``tcp://…:0`` resolves
-        its ephemeral port, no address picks a fresh inproc name)."""
+        its ephemeral port, no address picks a fresh inproc name).
+
+        ``fault_plan`` (a ``repro.online.faults.FaultPlan``) wraps every
+        accepted comm in the plan's seeded fault schedule and arms its
+        listener-restart events: at each ``restart_after`` threshold the
+        listener goes down, every established connection dies abruptly, and
+        the same concrete address rebinds — clients ride it out through
+        their reconnect/retry path."""
         if not address:
             address = f"inproc://broker-{next(_SERVE_SEQ)}"
         kw.setdefault("serializer", self.serializer)
+        handler = self._handle
+        injector = None
+        if fault_plan is not None:
+            injector = FaultInjector(fault_plan)
+            handler = injector.wrap_handler(self._handle)
         lst = asyncio.run_coroutine_threadsafe(
-            listen(address, self._handle, **kw), self.loop).result(30)
+            listen(address, handler, **kw), self.loop).result(30)
         self._listeners.append(lst)
+        if injector is not None:
+            self._injectors.append(injector)
+            bound = lst.address
+
+            def trigger():               # fires on the loop thread
+                asyncio.ensure_future(
+                    self._restart_listener(bound, handler, injector, kw))
+
+            injector.on_restart = trigger
         return lst.address
+
+    async def _restart_listener(self, address, handler, injector, kw):
+        """The broker-restart fault: tear the listener down (severing every
+        live connection, no clean goodbyes) and rebind the same address."""
+        for i, lst in enumerate(self._listeners):
+            if lst.address == address:
+                await lst.stop()
+                await injector.close_active()
+                self._listeners[i] = await listen(address, handler, **kw)
+                return
 
     def stop(self):
         if self._thread is None:
@@ -217,6 +268,55 @@ class AsyncBroker:
     def __exit__(self, *a):
         self.stop()
         return False
+
+    # ------------------------------------------------------------ recovery
+    @classmethod
+    def from_registry(cls, registry_dir, name: str, *,
+                      version: int | None = None, **kw) -> "AsyncBroker":
+        """Rebuild a broker's model state from a ``ModelRegistry`` snapshot.
+
+        This is the crash-recovery path: a replacement broker process owns
+        no live model objects, but the registry's versioned snapshot is the
+        durable source of truth.  Scoring is a pure function of (model
+        params, rows), so the rebuilt broker serves bit-identical
+        probabilities to the one that died."""
+        from repro.core.predictor import TaskPredictor
+        from repro.online.registry import ModelRegistry
+        snap = ModelRegistry(registry_dir).load(name, version)
+        pred = TaskPredictor().load_snapshot(snap)
+        models = {}
+        for kind in ("map", "reduce"):
+            model = pred.model_for_kind(kind)
+            if model is not None:
+                models[kind] = model
+        return cls(models, **kw)
+
+    def resume_collector(self, collector):
+        """Attach a telemetry collector after a broker restart, seeding the
+        per-source wire accounting from the collector's surviving state so
+        producers reconnect gaplessly: the first frame after the restart is
+        judged against the last ``n`` actually ingested, not against zero
+        (which would count every producer as one bogus reconnect-with-gap)."""
+        self.collector = collector
+        for name in collector.source_names():
+            src = collector.sources[name]
+            self._telemetry_sources[name] = {
+                "frames": src.n_frames, "last_n": src.last_n,
+                "gaps": src.gaps, "reconnects": src.reconnects,
+                "ingest_s": 0.0}
+
+    def fault_stats(self) -> dict:
+        """Replay/dedup counters + injected-fault totals (reporting only —
+        these quantify the chaos absorbed, and stay out of ``stats()`` so
+        faulted and clean runs emit identical deterministic counters)."""
+        injected = {"events": 0, "drops": 0, "delays": 0, "duplicates": 0,
+                    "closes": 0, "restarts": 0, "messages_in": 0}
+        for inj in self._injectors:
+            for k, v in inj.stats().items():
+                injected[k] += v
+        return {"replays": self.n_replays,
+                "dup_requests": self.n_dup_requests,
+                "injected": injected}
 
     # ------------------------------------------------------------ membership
     def add_clients(self, n: int = 1):
@@ -243,25 +343,77 @@ class AsyncBroker:
                     msg = await comm.recv()
                 except CommClosedError:
                     return
-                op = msg.get("op")
-                if op == "predict" or op == "submit":
-                    await self._admit(comm, msg, op)
-                elif op == "done":
-                    self._client_done()
-                elif op == "register":
-                    self._add_clients(int(msg.get("n", 1)))
-                elif op == "telemetry":
-                    self._route_telemetry(msg)
-                elif op == "stats":
-                    await comm.send(self.stats())
-                elif op == "ping":
-                    await comm.send({"op": "pong"})
-                else:
-                    await comm.send({"id": msg.get("id"),
-                                     "error": f"unknown op {op!r}"})
+                try:
+                    await self._dispatch(comm, msg)
+                except CommClosedError:
+                    # the connection died mid-reply (peer vanished, or an
+                    # injected abrupt close): the client's retry path owns
+                    # recovery — this handler just winds down
+                    return
         finally:
             if not comm.closed:
                 await comm.close()
+
+    async def _dispatch(self, comm, msg):
+        op = msg.get("op")
+        if op == "predict" or op == "submit":
+            if not self._replay_hit(comm, msg):
+                await self._admit(comm, msg, op)
+        elif op == "done":
+            cid = msg.get("client")
+            if cid is None:
+                self._client_done()      # legacy fire-and-forget form
+            else:
+                if cid not in self._done_clients:
+                    self._done_clients.add(cid)
+                    self._replay.pop(cid, None)
+                    self._client_done()
+                if msg.get("id") is not None:
+                    # acked so the client can retry a lost done
+                    # without double-shrinking the barrier
+                    await comm.send({"id": msg["id"], "ok": True})
+        elif op == "register":
+            self._add_clients(int(msg.get("n", 1)))
+        elif op == "telemetry":
+            self._route_telemetry(msg)
+        elif op == "stats":
+            await comm.send(self.stats())
+        elif op == "ping":
+            await comm.send({"op": "pong"})
+        else:
+            await comm.send({"id": msg.get("id"),
+                             "error": f"unknown op {op!r}"})
+
+    def _replay_hit(self, comm, msg) -> bool:
+        """Idempotent-replay check for a scoring request.
+
+        Returns True when the message is a retransmit (same client id +
+        request id as this client's one outstanding slot): a still-pending
+        original just gets its reply re-aimed at the new comm, a finished
+        one gets the cached reply resent.  Either way the request is never
+        re-admitted — ``n_requests``/flush composition see it exactly once.
+        Messages without a ``client`` field (raw-comm callers) bypass
+        dedup entirely."""
+        cid = msg.get("client")
+        if cid is None:
+            return False
+        entry = self._replay.get(cid)
+        if entry is None or entry[0] != msg.get("id"):
+            return False
+        self.n_dup_requests += 1
+        _, state, val = entry
+        if state == "pending":
+            val.comm = comm              # reply lands on the fresh comm
+        else:
+            self.n_replays += 1
+            self._send_cached(comm, val)
+        return True
+
+    def _send_cached(self, comm, msg: dict):
+        if comm.closed:
+            return
+        task = asyncio.ensure_future(comm.send(msg))
+        task.add_done_callback(_swallow_closed)
 
     async def _admit(self, comm, msg, op):
         if op == "predict":
@@ -288,7 +440,10 @@ class AsyncBroker:
         deadline = (time.perf_counter() + budget * 1e-3 * self.slo_margin
                     if budget else None)
         self._vnow += 1
-        req = _Req(comm, msg.get("id"), groups, rows, self._vnow, deadline)
+        req = _Req(comm, msg.get("id"), groups, rows, self._vnow, deadline,
+                   msg.get("client"))
+        if req.client is not None:
+            self._replay[req.client] = (req.req_id, "pending", req)
         first = not self._queue
         self._queue.append(req)
         self._queued_rows += rows
@@ -365,6 +520,10 @@ class AsyncBroker:
             self._reply(req, {"id": req.req_id, "probs": span})
 
     def _reply(self, req: _Req, msg: dict):
+        if req.client is not None:
+            # cache even error replies: scoring is deterministic, so a retry
+            # of a failed request deserves the same verdict, not a rescore
+            self._replay[req.client] = (req.req_id, "done", msg)
         if req.comm.closed:
             return
         task = asyncio.ensure_future(req.comm.send(msg))
@@ -441,33 +600,155 @@ class BrokerClient:
     """Synchronous client facade with the ``PredictionBroker`` surface
     (``submit`` / ``done``), so a ``BrokerPredictor`` can serve a fleet cell
     through an ``AsyncBroker`` unchanged.  One outstanding request per client
-    (the predictor blocks on each flush), so replies need no demux."""
+    (the predictor blocks on each flush), so replies need no demux.
 
-    def __init__(self, address: str, loop: asyncio.AbstractEventLoop,
-                 **connect_kw):
+    Every request carries a stable ``client`` id + monotone request id, and
+    the request path is a retry loop: on a transport failure or a
+    ``request_timeout_s`` expiry the comm is dropped (a timed-out stream can
+    no longer be trusted — a late reply would answer the wrong request), the
+    client sleeps a deterministic capped-exponential backoff
+    (``faults.backoff_delay``), reconnects, and resends the *same* message.
+    The broker's replay slot makes the retry idempotent, so transparent
+    reconnect never double-scores a flush.  The budget is ``max_retries``
+    attempts within ``deadline_s``; past it the client raises
+    ``PredictorUnavailableError`` — the graceful-degradation signal.  With
+    the default ``request_timeout_s=None`` the client blocks forever like
+    the pre-fault-tolerance client (retries then only trigger on explicit
+    connection failures)."""
+
+    def __init__(self, address: str, loop: asyncio.AbstractEventLoop, *,
+                 client_id: str | None = None,
+                 request_timeout_s: float | None = None,
+                 deadline_s: float | None = None, max_retries: int = 8,
+                 backoff_base_s: float = 0.05, backoff_cap_s: float = 1.0,
+                 retry_seed: int = 0, **connect_kw):
         self.address = address
-        self._comm = SyncComm.connect(address, loop, **connect_kw)
+        self._loop = loop
+        self._connect_kw = connect_kw
+        self.client_id = client_id or f"c{os.getpid()}-{next(_CLIENT_SEQ)}"
+        self.request_timeout_s = request_timeout_s
+        self.deadline_s = deadline_s
+        self.max_retries = int(max_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.retry_seed = int(retry_seed)
+        self.n_retries = 0
+        self.n_reconnects = 0
         self._seq = 0
         self._done_sent = False
+        self._comm = None
+        self._was_connected = False
+        self._comm = self._connect(self._budget_deadline())
 
+    # ------------------------------------------------------------ plumbing
+    def _budget_deadline(self) -> float | None:
+        return (None if self.deadline_s is None
+                else time.monotonic() + self.deadline_s)
+
+    def _remaining(self, deadline: float | None) -> float | None:
+        if deadline is None:
+            return None
+        return max(deadline - time.monotonic(), 0.001)
+
+    def _attempt_timeout(self, deadline: float | None) -> float | None:
+        rem = self._remaining(deadline)
+        if self.request_timeout_s is None:
+            return rem
+        return rem if rem is not None and rem < self.request_timeout_s \
+            else self.request_timeout_s
+
+    def _backoff(self, attempt: int, deadline: float | None):
+        delay = backoff_delay(attempt, base=self.backoff_base_s,
+                              cap=self.backoff_cap_s, seed=self.retry_seed)
+        rem = self._remaining(deadline)
+        if rem is not None:
+            delay = min(delay, rem)
+        time.sleep(delay)
+
+    def _connect(self, deadline: float | None) -> SyncComm:
+        """Connect with retries: a listener mid-restart refuses connections
+        for a moment, and that window must look like latency, not failure."""
+        attempt = 0
+        while True:
+            try:
+                comm = SyncComm.connect(
+                    self.address, self._loop,
+                    timeout=self._attempt_timeout(deadline) or 30.0,
+                    **self._connect_kw)
+                if self._was_connected:
+                    self.n_reconnects += 1
+                self._was_connected = True
+                return comm
+            except (CommClosedError, OSError,
+                    concurrent.futures.TimeoutError) as e:
+                attempt += 1
+                out_of_time = (deadline is not None
+                               and time.monotonic() >= deadline)
+                if attempt > self.max_retries or out_of_time:
+                    raise PredictorUnavailableError(
+                        f"cannot reach broker at {self.address} "
+                        f"after {attempt} attempts: {e!r}") from e
+                self._backoff(attempt - 1, deadline)
+
+    def _drop_comm(self):
+        if self._comm is not None:
+            try:
+                self._comm.close(timeout=1.0)
+            except Exception:
+                pass
+            self._comm = None
+
+    def _request(self, msg: dict) -> dict:
+        """Send one message and block for its reply, retrying transparently
+        across timeouts, dead comms, and broker restarts."""
+        deadline = self._budget_deadline()
+        attempt = 0
+        while True:
+            try:
+                if self._comm is None:
+                    self._comm = self._connect(deadline)
+                t = self._attempt_timeout(deadline)
+                self._comm.send(msg, timeout=t)
+                while True:
+                    reply = self._comm.recv(timeout=t)
+                    if reply.get("id") == msg["id"]:
+                        return reply
+                    # a stale duplicate (wire-level dup fault or a late
+                    # reply to an already-retried request): discard and
+                    # keep waiting for the answer to THIS request
+            except (CommClosedError, OSError,
+                    concurrent.futures.TimeoutError) as e:
+                self._drop_comm()
+                attempt += 1
+                self.n_retries += 1
+                out_of_time = (deadline is not None
+                               and time.monotonic() >= deadline)
+                if attempt > self.max_retries or out_of_time:
+                    raise PredictorUnavailableError(
+                        f"broker at {self.address} unreachable after "
+                        f"{attempt} attempts: {e!r}") from e
+                self._backoff(attempt - 1, deadline)
+
+    # ------------------------------------------------------------ API
     def submit(self, groups) -> list:
         if not groups:
             return []
         self._seq += 1
-        self._comm.send({"op": "submit", "id": self._seq, "groups": groups})
-        reply = self._comm.recv()
+        reply = self._request({"op": "submit", "id": self._seq,
+                               "client": self.client_id, "groups": groups})
         if reply.get("error") is not None:
+            # a broker-reported error is an answer, not an outage: no retry
             raise RuntimeError(f"broker error: {reply['error']}")
         return list(reply["probs"])
 
     def predict(self, kind: str, X, budget_ms: float | None = None):
         """Named-model scoring (the op that works across tcp://)."""
         self._seq += 1
-        msg = {"op": "predict", "id": self._seq, "kind": kind, "X": X}
+        msg = {"op": "predict", "id": self._seq, "client": self.client_id,
+               "kind": kind, "X": X}
         if budget_ms is not None:
             msg["budget_ms"] = budget_ms
-        self._comm.send(msg)
-        reply = self._comm.recv()
+        reply = self._request(msg)
         if reply.get("error") is not None:
             raise RuntimeError(f"broker error: {reply['error']}")
         (probs,) = reply["probs"]
@@ -477,9 +758,18 @@ class BrokerClient:
         self._comm.send({"op": "register", "n": n})
 
     def done(self):
-        if not self._done_sent:
-            self._done_sent = True
-            self._comm.send({"op": "done"})
+        """Retract this client from the barrier (acked + idempotent: a lost
+        ack is retried, the broker dedups by client id)."""
+        if self._done_sent:
+            return
+        self._done_sent = True
+        self._seq += 1
+        try:
+            self._request({"op": "done", "id": self._seq,
+                           "client": self.client_id})
+        except PredictorUnavailableError:
+            pass                         # broker is gone; nothing to retract
 
     def close(self):
-        self._comm.close()
+        if self._comm is not None:
+            self._comm.close()

@@ -44,6 +44,7 @@ from __future__ import annotations
 import asyncio
 import base64
 import collections
+import concurrent.futures
 import json
 import struct
 
@@ -315,7 +316,9 @@ class TCPComm(Comm):
             self._writer.write(_HEADER.pack(fmt, len(payload)))
             self._writer.write(payload)
             await self._writer.drain()       # kernel-buffer backpressure
-        except (ConnectionError, RuntimeError) as e:
+        except (OSError, RuntimeError) as e:
+            # OSError covers ConnectionError plus the rest of the socket
+            # failure surface (ETIMEDOUT, EPIPE via os-level writes, ...)
             self._closed = True
             raise CommClosedError(str(e)) from e
 
@@ -324,7 +327,7 @@ class TCPComm(Comm):
             raise CommClosedError("comm already closed")
         try:
             head = await self._reader.readexactly(_HEADER.size)
-        except (asyncio.IncompleteReadError, ConnectionError) as e:
+        except (asyncio.IncompleteReadError, OSError) as e:
             self._closed = True
             if isinstance(e, asyncio.IncompleteReadError) and not e.partial:
                 raise CommClosedError("peer closed") from e
@@ -338,10 +341,21 @@ class TCPComm(Comm):
                 f"(max_frame={self.max_frame})")
         try:
             payload = await self._reader.readexactly(length)
-        except (asyncio.IncompleteReadError, ConnectionError) as e:
+        except (asyncio.IncompleteReadError, OSError) as e:
             self._closed = True
             raise CommClosedError("connection lost mid-frame") from e
-        return loads(fmt, payload)
+        try:
+            return loads(fmt, payload)
+        except CommClosedError:
+            self._closed = True
+            raise
+        except Exception as e:
+            # an abrupt peer death can hand us a length-complete but garbage
+            # payload (e.g. RST after a partial kernel buffer flush); decode
+            # failures from any codec (struct/json/base64/msgpack) are a dead
+            # connection to the caller, never a bare parser exception
+            self._closed = True
+            raise CommClosedError(f"undecodable frame: {e!r}") from e
 
     async def close(self):
         if self._closed:
@@ -350,7 +364,7 @@ class TCPComm(Comm):
         try:
             self._writer.close()
             await self._writer.wait_closed()
-        except (ConnectionError, RuntimeError):   # peer already gone
+        except (OSError, RuntimeError):   # peer already gone
             pass
 
     @property
@@ -443,8 +457,16 @@ class SyncComm:
         return cls(fut.result(timeout), loop)
 
     def _run(self, coro, timeout=None):
-        return asyncio.run_coroutine_threadsafe(coro, self.loop) \
-            .result(timeout)
+        fut = asyncio.run_coroutine_threadsafe(coro, self.loop)
+        try:
+            return fut.result(timeout)
+        except concurrent.futures.TimeoutError:
+            # .result(timeout) does NOT cancel the scheduled coroutine; an
+            # orphaned recv would later consume a reply meant for the next
+            # request and desync the stream.  Cancel, and let the caller
+            # treat the comm as dead (retry layers reconnect).
+            fut.cancel()
+            raise
 
     def send(self, msg, timeout: float | None = None):
         return self._run(self.comm.send(msg), timeout)

@@ -1,0 +1,390 @@
+"""Fault-injection + fault-tolerance tests: FaultPlan as a typed fault-space
+point (bounds, exact round-trip, seeded sampling), transport-independent
+fault schedules, client retry + broker idempotent replay keeping the
+deterministic counters byte-clean, broker restart ride-through, registry
+crash recovery, graceful degradation with probe recovery, and the fleet
+acceptance claim — a faulted async sweep emits SWEEP.json byte-identical to
+its fault-free control."""
+
+import asyncio
+import random
+
+import numpy as np
+import pytest
+
+from repro.cluster.fleet import SweepSpec, run_sweep, sweep_json
+from repro.core.predictor import TaskPredictor
+from repro.ml.models import ALL_MODELS
+from repro.online.faults import (FaultInjector, FaultPlan,
+                                 PredictorUnavailableError, backoff_delay,
+                                 backoff_schedule)
+from repro.online.server import AsyncBroker, BrokerClient
+from repro.online.transport import connect, listen
+
+
+def _forest_data(n=400, f=10, seed=0):
+    rng = np.random.RandomState(seed)
+    X = rng.rand(n, f).astype(np.float32)
+    y = (X[:, 0] + 0.3 * rng.rand(n) > 0.8).astype(np.float32)
+    return X, y
+
+
+def _model(seed=0):
+    X, y = _forest_data(seed=seed)
+    return ALL_MODELS["R.F."]().fit(X, y)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: bounds, round-trip, sampling
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_round_trips_exactly():
+    plans = [FaultPlan(),
+             FaultPlan(seed=7, drop=0.2, delay=0.1, delay_s=(0.002, 0.05),
+                       duplicate=0.15, abrupt_close=0.05,
+                       restart_after=(5, 12), max_events=32,
+                       request_timeout_s=0.2, deadline_s=45.0)]
+    plans += [FaultPlan.sample(random.Random(k)) for k in range(20)]
+    for plan in plans:
+        assert FaultPlan.from_dict(plan.to_dict()) == plan
+
+
+def test_fault_plan_validate_rejects_out_of_space_points():
+    for bad in (dict(drop=0.6),                       # above per-fault cap
+                dict(drop=0.4, delay=0.4, duplicate=0.3),   # mass > 1
+                dict(delay_s=(0.02, 0.01)),           # inverted span
+                dict(delay_s=(0.0, 0.5)),             # span above bound
+                dict(restart_after=(3, 3)),           # not strictly increasing
+                dict(restart_after=(0,)),             # not positive
+                dict(seed=-1),
+                dict(max_events=5000),
+                dict(request_timeout_s=0.001),
+                dict(deadline_s=0.01)):
+        with pytest.raises(ValueError):
+            FaultPlan(**bad).validate()
+
+
+def test_fault_plan_sample_is_seeded_and_always_valid():
+    for k in range(30):
+        a = FaultPlan.sample(random.Random(k))
+        b = FaultPlan.sample(random.Random(k))
+        assert a == b                    # pure function of the rng state
+        a.validate()
+
+
+# ---------------------------------------------------------------------------
+# Deterministic backoff (the property file goes deeper; this is the contract)
+# ---------------------------------------------------------------------------
+
+def test_backoff_is_bounded_enveloped_and_reproducible():
+    sched = backoff_schedule(12, base=0.05, cap=1.0, seed=3)
+    assert sched == backoff_schedule(12, base=0.05, cap=1.0, seed=3)
+    for i, d in enumerate(sched):
+        env = min(1.0, 0.05 * 2 ** i)
+        assert env / 2 <= d <= env <= 1.0
+    with pytest.raises(ValueError):
+        backoff_delay(-1)
+
+
+# ---------------------------------------------------------------------------
+# Transport-independent fault schedules
+# ---------------------------------------------------------------------------
+
+def _faulted_echo_run(address, plan, n_msgs=60):
+    """Send n id'd messages through a fault-wrapped client comm; return the
+    sequence of message ids the server actually received."""
+    async def go():
+        got = []
+
+        async def sink_handler(comm):
+            from repro.online.transport import CommClosedError
+            try:
+                while True:
+                    got.append((await comm.recv())["i"])
+            except CommClosedError:
+                pass
+
+        lst = await listen(address, sink_handler)
+        injector = FaultInjector(plan)
+        comm = injector.wrap(await connect(lst.address), side="client")
+        for i in range(n_msgs):
+            await comm.send({"i": i})
+        await comm.send({"i": -1})       # flush marker past any delays
+        while not got or got[-1] != -1:
+            await asyncio.sleep(0.01)
+        await comm.close()
+        await lst.stop()
+        return got[:-1], injector.stats()
+    return asyncio.run(go())
+
+
+def test_fault_schedule_identical_on_inproc_and_tcp():
+    plan = FaultPlan(seed=11, drop=0.2, delay=0.1, delay_s=(0.0, 0.002),
+                     duplicate=0.15, max_events=4096)
+    got_inproc, st_inproc = _faulted_echo_run("inproc://t-faults", plan)
+    got_tcp, st_tcp = _faulted_echo_run("tcp://127.0.0.1:0", plan)
+    # the two transports share no I/O machinery, yet the seeded schedule —
+    # which messages vanish, which arrive twice — is bit-identical
+    assert got_inproc == got_tcp
+    assert st_inproc == st_tcp
+    assert st_inproc["drops"] > 0 and st_inproc["duplicates"] > 0
+    # and it matches the schedule derived from the plan alone
+    ref = FaultInjector(plan)
+    rng = ref._rng_for_conn(0)
+    expect = []
+    for i in range(60):
+        fault, _ = ref.draw(rng)
+        if fault != "none":
+            ref.record(fault)
+        if fault == "drop":
+            continue
+        expect.extend([i, i] if fault == "duplicate" else [i])
+    assert got_inproc == expect
+
+
+def test_fault_budget_caps_injected_events():
+    plan = FaultPlan(seed=1, drop=0.5, max_events=3)
+    got, st = _faulted_echo_run("inproc://t-budget", plan, n_msgs=50)
+    assert st["drops"] == 3 and st["events"] == 3
+    assert len(got) == 50 - 3            # budget spent: the rest fly clean
+
+
+# ---------------------------------------------------------------------------
+# Client retry + broker idempotent replay
+# ---------------------------------------------------------------------------
+
+def test_retries_and_replays_keep_deterministic_stats_byte_clean():
+    model = _model()
+    stream = _forest_data(seed=1)[0]
+    requests = [stream[i:i + 1 + (i % 3)] for i in range(0, 90, 3)]
+
+    def run(plan):
+        with AsyncBroker({"map": model}, policy="vt") as server:
+            addr = server.serve(fault_plan=plan)
+            kw = {} if plan is None else dict(
+                request_timeout_s=plan.request_timeout_s,
+                deadline_s=plan.deadline_s, retry_seed=plan.seed)
+            client = BrokerClient(addr, server.loop, **kw)
+            try:
+                outs = [client.predict("map", X) for X in requests]
+            finally:
+                client.close()
+            return outs, server.stats(), server.fault_stats(), client
+
+    plan = FaultPlan(seed=5, drop=0.25, delay=0.1, delay_s=(0.0, 0.01),
+                     duplicate=0.1, abrupt_close=0.05, max_events=48,
+                     request_timeout_s=0.2, deadline_s=60.0)
+    clean_outs, clean_stats, clean_faults, _ = run(None)
+    fault_outs, fault_stats, faults, client = run(plan)
+    for a, b in zip(clean_outs, fault_outs):
+        assert np.array_equal(a, b)      # every retry replayed bit-identically
+    # the chaos was real…
+    assert faults["injected"]["events"] > 0
+    assert client.n_retries > 0
+    assert faults["dup_requests"] > 0
+    # …and invisible to the deterministic counters
+    assert fault_stats == clean_stats
+    assert clean_faults == {"replays": 0, "dup_requests": 0,
+                            "injected": {"events": 0, "drops": 0, "delays": 0,
+                                         "duplicates": 0, "closes": 0,
+                                         "restarts": 0, "messages_in": 0}}
+
+
+def test_listener_restart_rides_through_on_reconnect():
+    model = _model()
+    stream = _forest_data(seed=2)[0]
+    plan = FaultPlan(seed=3, restart_after=(5, 12),
+                     request_timeout_s=0.25, deadline_s=60.0)
+    with AsyncBroker({"map": model}, policy="vt") as server:
+        addr = server.serve(fault_plan=plan)
+        client = BrokerClient(addr, server.loop,
+                              request_timeout_s=plan.request_timeout_s,
+                              deadline_s=plan.deadline_s,
+                              backoff_base_s=0.01, backoff_cap_s=0.1)
+        try:
+            for i in range(25):
+                X = stream[i:i + 2]
+                out = client.predict("map", X)
+                want = np.asarray(model.predict_proba(X), np.float32)
+                assert np.array_equal(out, want)
+        finally:
+            client.close()
+        faults = server.fault_stats()
+        stats = server.stats()
+    # both scheduled broker restarts fired, and the client absorbed them
+    assert faults["injected"]["restarts"] == 2
+    assert client.n_reconnects >= 2
+    assert stats["requests"] == 25       # replay slot: retries never re-admit
+
+
+def test_done_is_acked_and_deduped_by_client_id():
+    with AsyncBroker(policy="barrier") as server:
+        addr = server.serve()
+        server.add_clients(2)
+
+        async def go():
+            comm = await connect(addr)
+            for req_id in (1, 2):        # a retried done: same client id
+                await comm.send({"op": "done", "id": req_id, "client": "cA"})
+                ack = await comm.recv()
+                assert ack == {"id": req_id, "ok": True}
+            await comm.close()
+
+        asyncio.run_coroutine_threadsafe(go(), server.loop).result(30)
+        # barrier membership shrank exactly once despite two done messages
+        assert server._clients == 1
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery from the model registry
+# ---------------------------------------------------------------------------
+
+def test_from_registry_rebuilds_bit_identical_scoring(tmp_path):
+    from repro.online.registry import ModelRegistry
+    mx, my = _forest_data(seed=4)
+    pred = TaskPredictor(min_samples=40, max_train=400)
+    assert pred.fit_datasets((mx, my), (mx, my))
+    ModelRegistry(tmp_path).publish("outcome", pred.snapshot())
+
+    X = _forest_data(seed=5)[0][:16]
+    want = pred.predict_batch("map", X)
+    with AsyncBroker.from_registry(tmp_path, "outcome") as server:
+        addr = server.serve()
+        client = BrokerClient(addr, server.loop)
+        try:
+            out = client.predict("map", X)
+        finally:
+            client.close()
+    assert np.array_equal(out, want)     # the replacement broker serves the
+    #                                      dead one's exact floats
+
+
+def test_damaged_snapshot_fails_loudly_at_load():
+    with pytest.raises(ValueError, match="malformed predictor snapshot"):
+        TaskPredictor().load_snapshot({"algo": "R.F.", "models": {}})
+    with pytest.raises(ValueError, match="unknown"):
+        TaskPredictor().load_snapshot(
+            {"algo": "nope", "seed": 0, "min_samples": 1, "max_train": 1,
+             "fits": 0, "models": {"map": None, "reduce": None}})
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: schedule anyway, probe, recover
+# ---------------------------------------------------------------------------
+
+class _FlakyBroker:
+    """submit() raises PredictorUnavailableError for the first ``fail``
+    calls that actually reach it, then serves a recognisable constant."""
+
+    def __init__(self, fail):
+        self.fail = fail
+        self.n_submits = 0
+        self.n_retries = 0
+        self.n_reconnects = 0
+
+    def submit(self, groups):
+        self.n_submits += 1
+        if self.fail > 0:
+            self.fail -= 1
+            raise PredictorUnavailableError("broker down")
+        return [np.full(np.asarray(X).shape[0], 0.25, np.float32)
+                for _, X in groups]
+
+
+def test_degraded_flushes_fall_back_then_probe_recovers():
+    from repro.online.broker import BrokerPredictor
+    bp = BrokerPredictor(broker=_FlakyBroker(fail=1), fallback_probe_every=2)
+    X = np.zeros((3, 4), np.float32)
+    groups = [(None, X)]
+    # outage: the failed flush degrades, and the answer is p=1.0 per row —
+    # the untrained-model semantics, so the ATLAS gate schedules anyway
+    (out,) = bp._flush_brokered(groups)
+    assert bp.degraded and np.array_equal(out, np.ones(3, np.float32))
+    # countdown flushes never touch the broker
+    for _ in range(2):
+        (out,) = bp._flush_brokered(groups)
+        assert np.array_equal(out, np.ones(3, np.float32))
+    assert bp.broker.n_submits == 1
+    assert bp.n_fallbacks == 3 and bp.n_fallback_rows == 9
+    # the probe flush retries for real and clears the degradation
+    (out,) = bp._flush_brokered(groups)
+    assert not bp.degraded
+    assert np.array_equal(out, np.full(3, 0.25, np.float32))
+    fs = bp.frame_stats()
+    assert fs["fallbacks"] == 3
+    assert "retries" in fs and "reconnects" in fs
+
+
+def test_degraded_decisions_counter_is_none_omitted_in_stats():
+    from repro.core.atlas import AtlasStats
+    # healthy runs must keep their historical stats bytes: the counter only
+    # appears once a degraded decision actually happened
+    assert "degraded_decisions" not in AtlasStats().to_dict()
+    assert AtlasStats(degraded_decisions=4).to_dict()[
+        "degraded_decisions"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Fleet acceptance: faulted async sweep == clean async sweep, byte for byte
+# ---------------------------------------------------------------------------
+
+def test_fleet_async_faulted_sweep_matches_clean_bytes():
+    spec = SweepSpec(schedulers=("fifo", "atlas-fifo"), seeds=2,
+                     scenarios=("baseline",), workloads=("smoke",),
+                     min_samples=40, max_train=40)
+    clean = run_sweep(spec, executor="async", log=lambda *a: None)
+    plan = FaultPlan(seed=7, drop=0.15, delay=0.05, delay_s=(0.0, 0.005),
+                     duplicate=0.1, restart_after=(40,), max_events=24,
+                     request_timeout_s=0.25, deadline_s=120.0)
+    stats = {}
+    faulted = run_sweep(spec, executor="async", fault_plan=plan,
+                        fault_stats=stats, log=lambda *a: None)
+    assert sweep_json(faulted) == sweep_json(clean)
+    assert stats["injected"]["events"] > 0
+    assert stats["client_retries"] > 0
+    assert stats["fallbacks"] == 0       # degraded-free: parity is meaningful
+
+
+def test_fleet_rejects_fault_plan_on_non_async_executors():
+    spec = SweepSpec(schedulers=("fifo",), seeds=1, scenarios=("baseline",),
+                     workloads=("smoke",), min_samples=40, max_train=40)
+    with pytest.raises(ValueError, match="async"):
+        run_sweep(spec, executor="serial", fault_plan=FaultPlan(),
+                  log=lambda *a: None)
+
+
+# ---------------------------------------------------------------------------
+# Resumable sweeps: the cell ledger
+# ---------------------------------------------------------------------------
+
+def test_fleet_resume_reuses_ledger_cells_byte_identically(tmp_path):
+    spec = SweepSpec(schedulers=("fifo", "atlas-fifo"), seeds=2,
+                     scenarios=("baseline",), workloads=("smoke",),
+                     min_samples=40, max_train=40)
+    baseline = sweep_json(run_sweep(spec, executor="serial",
+                                    log=lambda *a: None))
+    first = sweep_json(run_sweep(spec, executor="serial",
+                                 resume_dir=tmp_path, log=lambda *a: None))
+    assert first == baseline             # the ledger never changes results
+    assert list(tmp_path.glob("w1__*.json"))
+    lines = []
+    second = sweep_json(run_sweep(
+        spec, executor="serial", resume_dir=tmp_path,
+        log=lambda *a: lines.append(" ".join(map(str, a)))))
+    assert second == baseline
+    assert any("resumed" in ln for ln in lines)
+
+
+def test_fleet_resume_ledger_wipes_on_fingerprint_mismatch(tmp_path):
+    spec = SweepSpec(schedulers=("fifo",), seeds=1, scenarios=("baseline",),
+                     workloads=("smoke",), min_samples=40, max_train=40)
+    run_sweep(spec, executor="serial", resume_dir=tmp_path,
+              log=lambda *a: None)
+    assert list(tmp_path.glob("w1__*.json"))
+    other = SweepSpec(schedulers=("fifo",), seeds=2, scenarios=("baseline",),
+                      workloads=("smoke",), min_samples=40, max_train=40)
+    lines = []
+    run_sweep(other, executor="serial", resume_dir=tmp_path,
+              log=lambda *a: lines.append(" ".join(map(str, a))))
+    # a different spec must not resume the old cells
+    assert not any("resumed" in ln for ln in lines)

@@ -260,6 +260,93 @@ def test_e2e_mid_stream_disconnect_reconnect():
 
 
 # ---------------------------------------------------------------------------
+# Consumer crash/restart (PR 10): producers reconnect, pollers resync
+# ---------------------------------------------------------------------------
+
+def test_collector_delta_resync_on_consumer_restart_seq_regression():
+    # a dashboard that was polling seq 5 keeps polling after the collector
+    # process restarts (fresh seq counter): since > seq must answer with a
+    # full-resync form, not an empty delta that wedges the poller forever
+    stale_cursor = 5
+    fresh = TelemetryCollector()
+    fresh.ingest({"type": "meta"}, source="s")
+    r = fresh.delta(stale_cursor)
+    assert r["resync"] is True and r["dropped"] == 0
+    assert [e["seq"] for e in r["frames"]] == [1]
+    # in-range cursors keep the plain gapless form
+    assert "resync" not in fresh.delta(1)
+
+
+def test_consumer_restart_producers_reconnect_gaplessly():
+    coll = TelemetryCollector()
+    srv = AsyncBroker().start()
+    srv.collector = coll
+    addr = srv.serve("tcp://127.0.0.1:0")
+    sink = TransportSink(addr, source="cell", backoff_base_s=0.01,
+                         backoff_cap_s=0.05)
+    try:
+        for i in range(3):
+            sink.emit(_sim_frame(i, 60.0 * i))
+        _wait(lambda: coll.seq >= 3)
+        srv.stop()                       # the consumer dies mid-run
+
+        # emits during the outage mark the comm down and buffer — the
+        # producer (the simulation) must never see the failure
+        for i in range(3, 6):
+            sink.emit(_sim_frame(i, 60.0 * i))
+        assert sink.n_send_errors >= 1
+        assert sink._comm is None
+
+        srv2 = AsyncBroker().start()
+        srv2.resume_collector(coll)      # seed wire accounting, not zeros
+        srv2.serve(addr)                 # rebind the same concrete port
+        try:
+            deadline = time.time() + 10.0
+            i = 6
+            while coll.seq < 7:          # outage frames + at least one more
+                assert time.time() < deadline, "sink never reconnected"
+                sink.emit(_sim_frame(i, 60.0 * i))
+                i += 1
+                time.sleep(0.02)
+            sink.close()
+            _wait(lambda: coll.aggregates()["cell"]["sim"]["frames"] >= 7)
+        finally:
+            srv2.stop()
+    finally:
+        sink.close()
+        srv.stop()
+    assert sink.n_reconnects == 1 and sink.n_dropped == 0
+    # per-frame n survived the outage contiguously and resume_collector
+    # seeded the broker's accounting, so the wire shows NO gap and no
+    # spurious restart
+    h = coll.health()["sources"]["cell"]
+    assert h["wire_gaps"] == 0 and h["reconnects"] == 0
+
+
+def test_live_server_handler_timeout_closes_stalled_connection():
+    import socket
+
+    c = TelemetryCollector()
+    with LiveServer(c, handler_timeout=0.3) as http:
+        host, port = http.address[len("http://"):].rsplit(":", 1)
+        s = socket.create_connection((host, int(port)))
+        try:
+            # stall mid-request-line: without the socket timeout this
+            # parks a handler thread (and the connection) forever
+            s.sendall(b"GET /snapshot HTTP/1.1\r\nHost: x")
+            s.settimeout(10.0)
+            t0 = time.time()
+            data = s.recv(65536)
+            assert data == b"", "server should close the stalled connection"
+            assert time.time() - t0 < 8.0
+        finally:
+            s.close()
+        # the server itself is still healthy
+        status, _ = _get(http.address + "/snapshot")
+        assert status == 200
+
+
+# ---------------------------------------------------------------------------
 # TransportSink lifecycle (satellite: close joins its own loop thread)
 # ---------------------------------------------------------------------------
 

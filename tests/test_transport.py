@@ -241,6 +241,81 @@ def test_inproc_backpressure_parks_fast_sender_behind_slow_consumer():
 # SyncComm facade
 # ---------------------------------------------------------------------------
 
+def test_tcp_undecodable_payload_raises_comm_closed_not_decode_error():
+    async def go():
+        errs = []
+
+        async def handler(comm):
+            try:
+                await comm.recv()
+            except Exception as e:                   # noqa: BLE001 (asserting type)
+                errs.append(e)
+
+        lst = await listen("tcp://127.0.0.1:0", handler)
+        host, port = lst.address.split("://")[1].rsplit(":", 1)
+        _, writer = await asyncio.open_connection(host, int(port))
+        # well-formed header, garbage payload: the decode failure must
+        # surface as CommClosedError (the stream can no longer be trusted),
+        # never as a raw json/msgpack/struct error from the codec
+        writer.write(b"J" + struct.pack("!I", 4) + b"\xff\x00{[")
+        await writer.drain()
+        for _ in range(100):
+            if errs:
+                break
+            await asyncio.sleep(0.01)
+        assert errs and isinstance(errs[0], CommClosedError)
+        writer.close()
+        await lst.stop()
+    _run(go())
+
+
+def test_tcp_abrupt_close_mid_frame_raises_comm_closed_client_side():
+    async def go():
+        async def slam(comm):
+            # read the request, then vanish mid-reply: header promises a
+            # payload that never arrives before the transport drops
+            await comm.recv()
+            comm._writer.write(b"J" + struct.pack("!I", 500) + b"{\"par")
+            await comm._writer.drain()
+            comm._writer.close()
+
+        lst = await listen("tcp://127.0.0.1:0", slam)
+        comm = await connect(lst.address)
+        await comm.send({"op": "x"})
+        with pytest.raises(CommClosedError):
+            await comm.recv()
+        assert comm.closed
+        await lst.stop()
+    _run(go())
+
+
+def test_sync_comm_recv_timeout_cancels_and_raises():
+    import concurrent.futures
+
+    loop = asyncio.new_event_loop()
+    t = threading.Thread(target=loop.run_forever, daemon=True)
+    t.start()
+    try:
+        async def silent(comm):
+            try:
+                while True:
+                    await comm.recv()    # absorb, never reply
+            except CommClosedError:
+                pass
+
+        lst = asyncio.run_coroutine_threadsafe(
+            listen("inproc://t-sync-timeout", silent), loop).result(10)
+        sc = SyncComm.connect("inproc://t-sync-timeout", loop)
+        sc.send({"op": "x"})
+        with pytest.raises(concurrent.futures.TimeoutError):
+            sc.recv(timeout=0.1)
+        sc.close()                       # timed-out comm still closes cleanly
+        asyncio.run_coroutine_threadsafe(lst.stop(), loop).result(10)
+    finally:
+        loop.call_soon_threadsafe(loop.stop)
+        t.join(5)
+
+
 def test_sync_comm_blocking_roundtrip_from_foreign_thread():
     loop = asyncio.new_event_loop()
     t = threading.Thread(target=loop.run_forever, daemon=True)
